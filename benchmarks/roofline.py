@@ -1,0 +1,55 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the per-(arch x shape x mesh) three-term table — the §Roofline
+deliverable. Falls back to a note if the dry-run has not been executed."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+__all__ = ["run", "load_records", "DRYRUN_DIR"]
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_records(directory: Path | None = None) -> list[dict]:
+    directory = directory or DRYRUN_DIR
+    records = []
+    if directory.exists():
+        for path in sorted(directory.glob("*.json")):
+            try:
+                records.append(json.loads(path.read_text()))
+            except Exception:
+                pass
+    return records
+
+
+def run() -> list[dict]:
+    rows = []
+    records = load_records()
+    if not records:
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": "run `python -m repro.launch.dryrun --all` first"}]
+    for rec in records:
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            rows.append({"name": f"roofline/{tag}", "us_per_call": 0.0,
+                         "derived": f"SKIPPED: {rec.get('reason', '')[:90]}"})
+            continue
+        if rec["status"] != "ok":
+            rows.append({"name": f"roofline/{tag}", "us_per_call": 0.0,
+                         "derived": f"ERROR: {rec.get('error', '')[:90]}"})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "name": f"roofline/{tag}",
+            "us_per_call": round(r["step_time_s"] * 1e6
+                                 if "step_time_s" in r else
+                                 max(r["compute_s"], r["memory_s"],
+                                     r["collective_s"]) * 1e6, 1),
+            "derived": (
+                f"compute={r['compute_s']:.2e}s mem={r['memory_s']:.2e}s "
+                f"coll={r['collective_s']:.2e}s dom={r['dominant']} "
+                f"useful={r['useful_flops_fraction']:.2f} "
+                f"roofline_frac={r['roofline_fraction']:.3f}"),
+        })
+    return rows

@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point: Table II (hardware + MAE), Fig 1(b) (error
+distribution), SC-GEMM microbenchmarks, and the dry-run roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig1b,sc_gemm,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks to run")
+    args = ap.parse_args()
+
+    from . import fig1b, roofline, sc_gemm, table2
+    suites = {"table2": table2.run, "fig1b": fig1b.run,
+              "sc_gemm": sc_gemm.run, "roofline": roofline.run}
+    selected = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in selected:
+        try:
+            for row in suites[key]():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(failures)
+
+
+if __name__ == "__main__":
+    main()

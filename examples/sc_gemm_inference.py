@@ -1,0 +1,50 @@
+"""SC-GEMM inference emulation: run an assigned architecture (reduced scale)
+with its MLP projections executed through the paper's stochastic multiplier,
+and measure the quality delta vs exact numerics — the paper's "stochastic
+multipliers in GEMM accelerators" scenario, end to end.
+
+    PYTHONPATH=src python examples/sc_gemm_inference.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models import bind
+
+
+def main():
+    base = ARCHS["smollm-360m"].reduced(dtype="float32")
+    cfg_exact = base
+    cfg_sc = dataclasses.replace(base, use_sc_gemm=True, sc_bits=8,
+                                 name=base.name + "-sc")
+
+    key = jax.random.PRNGKey(0)
+    params = bind(cfg_exact).init_params(key)   # same params for both numerics
+
+    b, s = 4, 64
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
+                                cfg_exact.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    h_exact, _ = bind(cfg_exact).forward_hidden(params, batch)
+    h_sc, _ = bind(cfg_sc).forward_hidden(params, batch)
+
+    rel = float(jnp.linalg.norm(h_sc - h_exact) / jnp.linalg.norm(h_exact))
+    cos = float(jnp.vdot(h_sc, h_exact) /
+                (jnp.linalg.norm(h_sc) * jnp.linalg.norm(h_exact)))
+    loss_exact = float(bind(cfg_exact).loss_fn(params, batch))
+    loss_sc = float(bind(cfg_sc).loss_fn(params, batch))
+
+    print(f"arch: {base.name} ({base.n_layers}L d={base.d_model})")
+    print(f"hidden-state rel err  (SC vs exact): {rel:.4f}")
+    print(f"hidden-state cosine   (SC vs exact): {cos:.4f}")
+    print(f"CE loss exact={loss_exact:.4f}  SC-GEMM={loss_sc:.4f}")
+    print("note: the paper's multiplier has MAE 1/24 in the unipolar domain;")
+    print("per-product error is one-sided, so depth compounds it — this is a")
+    print("property of the reproduced design, quantified here end-to-end.")
+
+
+if __name__ == "__main__":
+    main()

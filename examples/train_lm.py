@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~100M-class LM for a few hundred steps on the
+synthetic pipeline, with checkpoint/restart demonstrated mid-run.
+
+By default trains a width-reduced smollm variant sized to finish on CPU in a
+few minutes; pass --full-360m on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs.registry import ARCHS
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-360m", action="store_true")
+    args = ap.parse_args()
+
+    if args.full_360m:
+        cfg = ARCHS["smollm-360m"]
+    else:
+        cfg = dataclasses.replace(
+            ARCHS["smollm-360m"].reduced(dtype="float32"),
+            n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+            d_ff=1024, vocab_size=4096, name="smollm-mini")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        half = args.steps // 2
+        print(f"[example] training {cfg.name} for {half} steps, then killing "
+              f"and restarting from the checkpoint…")
+        out1 = train(cfg, steps=half, batch=args.batch, seq=args.seq,
+                     ckpt_dir=ckpt_dir, ckpt_every=max(half // 2, 1))
+        # simulate failure + restart: train() restores from the latest commit
+        out2 = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                     ckpt_dir=ckpt_dir, ckpt_every=max(half // 2, 1))
+        first, mid, last = out1["losses"][0], out1["losses"][-1], out2["losses"][-1]
+        print(f"[example] loss {first:.3f} -> {mid:.3f} -> {last:.3f} "
+              f"(restart resumed training; loss kept falling: {last < mid})")
+        assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""§Perf hillclimbing driver: run a named (arch, shape) cell with config
+overrides and print the before/after roofline delta. Results append to
+experiments/perf/<tag>.json.
+
+    PYTHONPATH=src python experiments/hillclimb.py qwen2.5-14b train_4k \
+        '{"skip_masked_blocks": true}' iterA
+"""
+import json
+import sys
+from pathlib import Path
+
+PERF = Path(__file__).parent / "perf"
+
+
+def main():
+    sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+    from repro.launch.dryrun import run_cell
+
+    arch, shape = sys.argv[1], sys.argv[2]
+    overrides = json.loads(sys.argv[3]) if len(sys.argv) > 3 else {}
+    tag = sys.argv[4] if len(sys.argv) > 4 else "variant"
+
+    PERF.mkdir(parents=True, exist_ok=True)
+    rec = run_cell(arch, shape, False, overrides=overrides)
+    out = PERF / f"{arch}__{shape}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        print(f"[perf] {arch}/{shape}/{tag}: compute={r['compute_s']:.3e} "
+              f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+              f"dom={r['dominant']} frac={r['roofline_fraction']:.4f}")
+    else:
+        print(f"[perf] {arch}/{shape}/{tag}: {rec['status']} "
+              f"{rec.get('error', '')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

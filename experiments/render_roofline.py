@@ -1,0 +1,45 @@
+"""Render experiments/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+from pathlib import Path
+
+DRY = Path(__file__).parent / "dryrun"
+
+
+def fmt(v, unit=""):
+    if v == 0:
+        return "0"
+    for scale, suf in [(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")]:
+        if abs(v) >= scale:
+            return f"{v / scale:.2f}{suf}{unit}"
+    return f"{v:.3g}{unit}"
+
+
+def render(mesh_filter="single"):
+    rows = []
+    for f in sorted(DRY.glob(f"*__{mesh_filter}.json")):
+        rows.append(json.loads(f.read_text()))
+    out = []
+    out.append("| arch | shape | status | compute (s) | memory (s) | collective (s) "
+               "| dominant | useful frac | roofline frac | HBM/chip (temp) |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60].replace("|", "/")
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                       f"| — | — | — | — | — | — | {reason} |")
+            continue
+        rl = r["roofline"]
+        tmp = r["memory"]["temp_size_in_bytes"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+            f"| {rl['collective_s']:.3e} | **{rl['dominant']}** "
+            f"| {rl['useful_flops_fraction']:.3f} "
+            f"| {rl['roofline_fraction']:.4f} | {fmt(tmp, 'B')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(render(mesh))

@@ -1,0 +1,2 @@
+"""Async sharded checkpointing with commit-ordered restore."""
+from .checkpointer import Checkpointer

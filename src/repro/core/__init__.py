@@ -1,0 +1,22 @@
+"""Core library: the paper's bit-parallel deterministic stochastic multiplier,
+prior-work baselines, SC-GEMM, error analysis and the hardware cost model."""
+from .tcu import (correlation_encode, pack_stream, popcount_u32, stream_length,
+                  tcu_decode, unpack_stream)
+from .multipliers import (MULTIPLIERS, gaines, jenson, proposed_bitlevel,
+                          proposed_closed_form, umul)
+from .sc_numerics import (SignMagnitude, dequantize_sign_magnitude,
+                          quantize_sign_magnitude)
+from .sc_matmul import sc_matmul, sc_matmul_mxu_split, sc_matmul_reference
+from .sc_layers import sc_dense
+from .error_analysis import error_vs_operand_difference, mae, table2_mae
+from . import hardware_model
+
+__all__ = [
+    "correlation_encode", "pack_stream", "popcount_u32", "stream_length",
+    "tcu_decode", "unpack_stream",
+    "MULTIPLIERS", "gaines", "jenson", "proposed_bitlevel",
+    "proposed_closed_form", "umul",
+    "SignMagnitude", "dequantize_sign_magnitude", "quantize_sign_magnitude",
+    "sc_matmul", "sc_matmul_mxu_split", "sc_matmul_reference", "sc_dense",
+    "error_vs_operand_difference", "mae", "table2_mae", "hardware_model",
+]

@@ -1,0 +1,78 @@
+"""Error analysis for stochastic multipliers — reproduces Table II (MAE column)
+and Fig. 1(b) (absolute error vs normalized operand difference)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .multipliers import MULTIPLIERS
+from .tcu import stream_length
+
+__all__ = ["exhaustive_grid", "mae", "error_vs_operand_difference", "table2_mae"]
+
+
+def exhaustive_grid(bits: int) -> tuple[jax.Array, jax.Array]:
+    """All (x, y) operand pairs for B-bit inputs, as two flat int32 arrays."""
+    n = stream_length(bits)
+    x, y = jnp.meshgrid(jnp.arange(n, dtype=jnp.int32),
+                        jnp.arange(n, dtype=jnp.int32), indexing="ij")
+    return x.reshape(-1), y.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "bits"))
+def _abs_error(fn: Callable, bits: int) -> jax.Array:
+    x, y = exhaustive_grid(bits)
+    n = stream_length(bits)
+    est = fn(x, y, bits)
+    # x*y <= (2^B - 1)^2 < 2^24 is exact in float32
+    target = (x.astype(jnp.float32) * y) / (n * n)
+    return jnp.abs(est - target)
+
+
+def mae(name_or_fn, bits: int = 8) -> float:
+    """Mean absolute error of a multiplier over the exhaustive B-bit grid."""
+    fn = MULTIPLIERS[name_or_fn] if isinstance(name_or_fn, str) else name_or_fn
+    return float(_abs_error(fn, bits).mean())
+
+
+def table2_mae(bits: int = 8,
+               multipliers: Mapping[str, Callable] | None = None) -> dict[str, float]:
+    """MAE for every multiplier — the accuracy column of the paper's Table II."""
+    multipliers = multipliers or MULTIPLIERS
+    return {name: mae(fn, bits) for name, fn in multipliers.items()}
+
+
+def error_vs_operand_difference(name_or_fn, bits: int = 8,
+                                n_bins: int = 16) -> dict[str, np.ndarray]:
+    """Fig. 1(b): distribution of absolute error binned by ``|x - y| / N``.
+
+    Returns bin centers, per-bin mean/max absolute error, and per-bin count.
+    The paper's claim: the proposed multiplier's error is less dependent on the
+    normalized operand difference than the baselines'.
+    """
+    fn = MULTIPLIERS[name_or_fn] if isinstance(name_or_fn, str) else name_or_fn
+    n = stream_length(bits)
+    x, y = exhaustive_grid(bits)
+    err = np.asarray(_abs_error(fn, bits))
+    diff = np.abs(np.asarray(x) - np.asarray(y)) / n
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    idx = np.clip(np.digitize(diff, edges) - 1, 0, n_bins - 1)
+    mean_err = np.zeros(n_bins)
+    max_err = np.zeros(n_bins)
+    count = np.zeros(n_bins, dtype=np.int64)
+    for b in range(n_bins):
+        mask = idx == b
+        count[b] = mask.sum()
+        if count[b]:
+            mean_err[b] = err[mask].mean()
+            max_err[b] = err[mask].max()
+    return {
+        "bin_centers": (edges[:-1] + edges[1:]) / 2,
+        "mean_abs_error": mean_err,
+        "max_abs_error": max_err,
+        "count": count,
+    }

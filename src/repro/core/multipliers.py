@@ -1,0 +1,237 @@
+"""The paper's bit-parallel deterministic stochastic multiplier + the three baselines.
+
+Every multiplier maps integer operands ``x, y`` in ``[0, 2**bits)`` to an
+estimate of the unipolar product ``(x/N)·(y/N)`` where ``N = 2**bits``. Two
+evaluation paths exist for the proposed design:
+
+* :func:`proposed_closed_form` — exact integer closed form (3 ALU ops). This
+  is the TPU-native production path used by SC-GEMM.
+* :func:`proposed_bitlevel` — materializes the N-bit streams through the
+  B-to-TCU decoder and the correlation encoder, ANDs them, popcounts. This is
+  the RTL-faithful oracle; tests assert it agrees with the closed form
+  everywhere.
+
+Baselines (see DESIGN.md §5 for fidelity notes):
+
+* :func:`gaines` — classic LFSR-SNG stochastic multiplier [Gaines 1969].
+  ``shared_sng=True`` (one LFSR driving both comparators, the area-saving
+  choice matching the paper's reported MAE≈0.08) degenerates to
+  ``min(x,y)/N``; independent LFSRs give the low-error variant.
+* :func:`jenson` — deterministic SC [Jenson & Riedel, ICCAD 2016]: operand A's
+  unary stream repeated, operand B clock-divided; exact after N² cycles.
+  ``operand_bits`` can be reduced to model a truncated cycle budget.
+* :func:`umul` — uGEMM's unary multiplier [Wu et al., ISCA 2020]: rate-coded
+  stream (bit-reversal low-discrepancy SNG) AND temporal-coded stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tcu import correlation_encode, stream_length, tcu_decode
+
+__all__ = [
+    "proposed_closed_form",
+    "proposed_bitlevel",
+    "gaines",
+    "jenson",
+    "umul",
+    "MULTIPLIERS",
+]
+
+
+# ---------------------------------------------------------------------------
+# Proposed multiplier
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def proposed_closed_form(x: jax.Array, y: jax.Array, *, bits: int) -> jax.Array:
+    """popcount(X_u AND Y_u) of the proposed multiplier, in closed form.
+
+    ``O(x, y) = msb·⌊x/2⌋ + clamp(min(y_low, ⌊(x − msb)/2⌋), 0)`` with
+    ``msb = y ≥ N/2`` and ``y_low = y mod N/2``. Validated exhaustively against
+    the bit-level construction for B = 2..8 (zero mismatches).
+
+    Returns the integer popcount; the product estimate is ``O / N``.
+    """
+    half = stream_length(bits) // 2
+    x = x.astype(jnp.int32)
+    y = y.astype(jnp.int32)
+    msb = (y >= half).astype(jnp.int32)
+    y_low = y - msb * half
+    tail = jnp.maximum(jnp.minimum(y_low, (x - msb) // 2), 0)
+    return msb * (x // 2) + tail
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def proposed_bitlevel(x: jax.Array, y: jax.Array, *, bits: int) -> jax.Array:
+    """Bit-level oracle: B-to-TCU -> correlation encoder -> AND array -> popcount."""
+    x_u = tcu_decode(x, bits=bits, dtype=jnp.int32)
+    y_u = correlation_encode(y, bits=bits, dtype=jnp.int32)
+    return (x_u & y_u).sum(axis=-1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Gaines (1969): LFSR stochastic number generators + AND
+# ---------------------------------------------------------------------------
+
+def _lfsr_sequence(bits: int, seed: int, taps: int) -> jax.Array:
+    """Fibonacci LFSR state sequence of period 2**bits - 1 (never hits 0)."""
+    n = stream_length(bits)
+
+    def step(state, _):
+        feedback = 0
+        s = state
+        t = taps
+        # XOR of tapped bits; taps is a static Python int mask.
+        fb = s & t
+        # parity of fb via popcount-parity (bits is small and static)
+        for _ in range(bits):
+            feedback = feedback ^ (fb & 1)
+            fb = fb >> 1
+        new = ((state << 1) | feedback) & (n - 1)
+        return new, state
+
+    _, states = jax.lax.scan(step, jnp.int32(seed), None, length=n - 1)
+    return states
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "shared_sng"))
+def gaines(x: jax.Array, y: jax.Array, *, bits: int,
+           shared_sng: bool = True, seed_x: int = 1, seed_y: int = 0x5A) -> jax.Array:
+    """Gaines stochastic multiplier. Returns popcount over the LFSR period.
+
+    Product estimate is ``count / (N - 1)`` (maximal LFSR period is N−1).
+    With ``shared_sng=True`` both comparators share one LFSR — the standard
+    area-saving configuration, which maximally correlates the streams and
+    degrades AND-multiplication toward ``min(x, y)``.
+    """
+    # maximal-length taps per width (x^8+x^6+x^5+x^4+1 for 8-bit, etc.)
+    taps_table = {3: 0b110, 4: 0b1100, 5: 0b10100, 6: 0b110000,
+                  7: 0b1100000, 8: 0b10111000}
+    taps = taps_table.get(bits, 0b10111000)
+    r_x = _lfsr_sequence(bits, seed_x, taps)
+    r_y = r_x if shared_sng else _lfsr_sequence(bits, seed_y, taps)
+
+    x = x.astype(jnp.int32)[..., None]
+    y = y.astype(jnp.int32)[..., None]
+    sb_x = (r_x <= x) & (r_x > 0)   # exactly x ones over the period
+    sb_y = (r_y <= y) & (r_y > 0)
+    return (sb_x & sb_y).sum(axis=-1, dtype=jnp.int32)
+
+
+def gaines_period(bits: int) -> int:
+    return stream_length(bits) - 1
+
+
+# ---------------------------------------------------------------------------
+# Jenson & Riedel (ICCAD 2016): deterministic SC, exact after N^2 cycles
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bits", "operand_bits"))
+def jenson(x: jax.Array, y: jax.Array, *, bits: int,
+           operand_bits: int | None = None) -> jax.Array:
+    """Deterministic SC multiplier: repeat-A x clock-divide-B.
+
+    Cycle ``c`` (0-indexed, ``c < N'^2``) computes
+    ``A_u[c mod N'] AND B_u[c div N']`` with both streams thermometer-coded.
+    The count over the full N'² cycles is exactly ``x'·y'`` — deterministic SC
+    trades latency for exactness. ``operand_bits`` < ``bits`` models running
+    the design under a truncated cycle budget (operands rounded to fewer bits,
+    N' = 2**operand_bits), which is the only reading under which the source
+    paper's nonzero MAE for this baseline is reproducible (EXPERIMENTS.md
+    §Fidelity).
+
+    Returns the integer count; the product estimate is ``count / N'²``.
+    """
+    ob = bits if operand_bits is None else operand_bits
+    shift = bits - ob
+    if shift < 0:
+        raise ValueError("operand_bits must be <= bits")
+    x = (x.astype(jnp.int32) >> shift)
+    y = (y.astype(jnp.int32) >> shift)
+    # count over N'^2 cycles of (c mod N' < x) & (c div N' < y) == x*y exactly.
+    return x * y
+
+
+def jenson_cycles(bits: int, operand_bits: int | None = None) -> int:
+    ob = bits if operand_bits is None else operand_bits
+    return stream_length(ob) ** 2
+
+
+# ---------------------------------------------------------------------------
+# uMUL (uGEMM, ISCA 2020): rate-coded (low-discrepancy SNG) x temporal-coded
+# ---------------------------------------------------------------------------
+
+def _bit_reverse(values: jax.Array, bits: int) -> jax.Array:
+    out = jnp.zeros_like(values)
+    for i in range(bits):
+        out = out | (((values >> i) & 1) << (bits - 1 - i))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "variant"))
+def umul(x: jax.Array, y: jax.Array, *, bits: int,
+         variant: str = "rate_temporal") -> jax.Array:
+    """uGEMM's unary multiplier over N = 2**bits cycles. Returns the popcount.
+
+    Variants (EXPERIMENTS.md §Fidelity reports the measured MAE of each):
+
+    * ``"rate_temporal"`` — X rate-coded by a bit-reversal (van der Corput)
+      comparator SNG, Y temporal-coded (thermometer). uGEMM's mixed-format
+      multiplier.
+    * ``"rate_rate_shared"`` — both operands rate-coded off one shared SNG
+      (fully correlated; degenerates toward min).
+    * ``"rate_rate_indep"`` — X rate-coded (bit-reversal), Y rate-coded off the
+      raw counter.
+    """
+    n = stream_length(bits)
+    c = jnp.arange(n, dtype=jnp.int32)
+    vdc = _bit_reverse(c, bits)          # low-discrepancy permutation of 0..N-1
+    x = x.astype(jnp.int32)[..., None]
+    y = y.astype(jnp.int32)[..., None]
+    if variant == "rate_temporal":
+        sb_x = vdc < x
+        sb_y = c < y
+    elif variant == "rate_rate_shared":
+        sb_x = vdc < x
+        sb_y = vdc < y
+    elif variant == "rate_rate_indep":
+        sb_x = vdc < x
+        sb_y = c < y  # counter order == thermometer; kept for API symmetry
+        sb_y = jnp.roll(sb_y, n // 3, axis=-1)
+    else:
+        raise ValueError(f"unknown uMUL variant {variant!r}")
+    return (sb_x & sb_y).sum(axis=-1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Uniform evaluation API: name -> (count_fn, denominator_fn)
+# ---------------------------------------------------------------------------
+
+def _proposed_eval(x, y, bits):
+    return proposed_closed_form(x, y, bits=bits) / stream_length(bits)
+
+
+def _gaines_eval(x, y, bits):
+    return gaines(x, y, bits=bits) / gaines_period(bits)
+
+
+def _jenson_eval(x, y, bits, operand_bits=None):
+    ob = bits if operand_bits is None else operand_bits
+    return jenson(x, y, bits=bits, operand_bits=operand_bits) / float(stream_length(ob)) ** 2
+
+
+def _umul_eval(x, y, bits):
+    return umul(x, y, bits=bits) / stream_length(bits)
+
+
+#: name -> callable(x, y, bits) returning the unipolar product estimate in [0,1].
+MULTIPLIERS = {
+    "proposed": _proposed_eval,
+    "gaines": _gaines_eval,
+    "jenson": _jenson_eval,
+    "umul": _umul_eval,
+}

@@ -1,0 +1,47 @@
+"""SC-GEMM as a drop-in layer numeric with straight-through-estimator autodiff.
+
+``sc_dense`` replaces ``x @ w`` with the stochastic-multiplier GEMM in the
+forward pass while backpropagating as if the matmul were exact (STE) — the
+standard recipe for quantization-aware training, which lets every assigned
+architecture run with the paper's numeric either for inference emulation or
+SC-aware finetuning.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sc_matmul import sc_matmul_mxu_split
+
+__all__ = ["sc_dense", "sc_einsum_bd_df"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def sc_dense(x: jax.Array, w: jax.Array, bits: int = 8) -> jax.Array:
+    """``x @ w`` through SC-GEMM. ``x: (..., K)``, ``w: (K, N)``."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = sc_matmul_mxu_split(x2.astype(jnp.float32), w.astype(jnp.float32), bits=bits)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def _sc_dense_fwd(x, w, bits):
+    return sc_dense(x, w, bits), (x, w)
+
+
+def _sc_dense_bwd(bits, res, g):
+    x, w = res
+    # Straight-through: gradients of the exact matmul.
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
+    return gx, gw
+
+
+sc_dense.defvjp(_sc_dense_fwd, _sc_dense_bwd)
+
+
+def sc_einsum_bd_df(x: jax.Array, w: jax.Array, bits: int = 8) -> jax.Array:
+    """Convenience alias of :func:`sc_dense` for ``...d,df->...f`` contractions."""
+    return sc_dense(x, w, bits)

@@ -1,0 +1,154 @@
+"""SC-GEMM: matrix multiplication with the paper's stochastic multiplier as the
+scalar-product numeric.
+
+Each scalar product inside the GEMM is
+``a·b ≈ s_a s_b · (O(x, y) / N) · (N² Δ_a Δ_b)`` where ``O`` is the proposed
+multiplier's closed form (see ``multipliers.proposed_closed_form``) and
+``x, y`` are B-bit magnitudes. Accumulation across K is exact integer addition
+(SC affects multiplication only — the paper targets the multiplier inside GEMM
+circuits; accumulators in uGEMM-style arrays are conventional counters).
+
+Three implementations, all bit-identical:
+
+* :func:`sc_matmul_reference` — K-blocked broadcast, pure jnp. The oracle.
+* :func:`sc_matmul_mxu_split` — the TPU-native reformulation. ``O`` splits as
+
+      O(x, y) = msb_y · ⌊x/2⌋ + clamp(min(y_low, ⌊(x − msb_y)/2⌋), 0)
+
+  The first term is a *true matmul* ``(s_x·⌊x/2⌋) @ (s_y·msb_y)`` and runs on
+  the MXU; only the clamped-min residual needs per-pair (VPU) work. Exactness
+  in fp32: magnitudes < 2¹⁵ and products < 2²⁴ for any realistic K.
+* ``kernels.sc_matmul`` — the Pallas TPU kernel using the same split with
+  VMEM tiling (see ``src/repro/kernels/``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sc_numerics import SignMagnitude, quantize_sign_magnitude
+from .tcu import stream_length
+
+__all__ = [
+    "sc_matmul_reference",
+    "sc_matmul_mxu_split",
+    "sc_matmul",
+    "sc_residual_term",
+]
+
+
+def _signed_counts_block(sx, mx, sy, my, bits: int) -> jax.Array:
+    """Signed popcounts Σ_k s·O(x,y) for one K-block via broadcasting.
+
+    ``mx, sx: (M, Kb)``; ``my, sy: (Kb, Nn)`` -> ``(M, Nn)`` int32.
+    """
+    half = stream_length(bits) // 2
+    x = mx[:, :, None].astype(jnp.int32)          # (M, Kb, 1)
+    y = my[None, :, :].astype(jnp.int32)          # (1, Kb, Nn)
+    msb = (y >= half).astype(jnp.int32)
+    y_low = y - msb * half
+    o = msb * (x // 2) + jnp.maximum(jnp.minimum(y_low, (x - msb) // 2), 0)
+    s = sx[:, :, None].astype(jnp.int32) * sy[None, :, :].astype(jnp.int32)
+    return (s * o).sum(axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k_block"))
+def sc_matmul_reference(a: jax.Array, b: jax.Array, *, bits: int = 8,
+                        k_block: int = 128) -> jax.Array:
+    """Oracle SC-GEMM: quantize, multiply every pair via the closed form, sum.
+
+    K is processed in blocks of ``k_block`` to bound the (M, Kb, N) broadcast.
+    """
+    qa = quantize_sign_magnitude(a, bits=bits)
+    qb = quantize_sign_magnitude(b, bits=bits)
+    m, k = a.shape
+    _, n = b.shape
+    pad = (-k) % k_block
+    if pad:
+        def padk(arr, axis):
+            widths = [(0, 0)] * arr.ndim
+            widths[axis] = (0, pad)
+            return jnp.pad(arr, widths)
+        sx, mx = padk(qa.sign, 1), padk(qa.mag, 1)
+        sy, my = padk(qb.sign, 0), padk(qb.mag, 0)
+    else:
+        sx, mx, sy, my = qa.sign, qa.mag, qb.sign, qb.mag
+    kp = k + pad
+
+    def body(carry, kb):
+        xs = jax.lax.dynamic_slice_in_dim(mx, kb * k_block, k_block, axis=1)
+        ss = jax.lax.dynamic_slice_in_dim(sx, kb * k_block, k_block, axis=1)
+        ys = jax.lax.dynamic_slice_in_dim(my, kb * k_block, k_block, axis=0)
+        ts = jax.lax.dynamic_slice_in_dim(sy, kb * k_block, k_block, axis=0)
+        return carry + _signed_counts_block(ss, xs, ts, ys, bits), None
+
+    counts, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.int32),
+                             jnp.arange(kp // k_block))
+    nn = stream_length(bits)
+    return counts.astype(jnp.float32) * (nn * qa.scale * qb.scale)
+
+
+def sc_residual_term(sx, mx, sy, my, bits: int, k_block: int = 128) -> jax.Array:
+    """Σ_k s_x s_y · clamp(min(y_low, ⌊(x − msb)/2⌋), 0) — the VPU residual."""
+    half = stream_length(bits) // 2
+    m, k = mx.shape
+    _, n = my.shape
+    pad = (-k) % k_block
+    if pad:
+        mx = jnp.pad(mx, ((0, 0), (0, pad)))
+        sx = jnp.pad(sx, ((0, 0), (0, pad)), constant_values=1)
+        my = jnp.pad(my, ((0, pad), (0, 0)))
+        sy = jnp.pad(sy, ((0, pad), (0, 0)), constant_values=1)
+    kp = k + pad
+
+    def body(carry, kb):
+        x = jax.lax.dynamic_slice_in_dim(mx, kb * k_block, k_block, 1)[:, :, None].astype(jnp.int32)
+        ssx = jax.lax.dynamic_slice_in_dim(sx, kb * k_block, k_block, 1)[:, :, None].astype(jnp.int32)
+        y = jax.lax.dynamic_slice_in_dim(my, kb * k_block, k_block, 0)[None].astype(jnp.int32)
+        ssy = jax.lax.dynamic_slice_in_dim(sy, kb * k_block, k_block, 0)[None].astype(jnp.int32)
+        msb = (y >= half).astype(jnp.int32)
+        y_low = y - msb * half
+        res = jnp.maximum(jnp.minimum(y_low, (x - msb) // 2), 0)
+        return carry + (ssx * ssy * res).sum(axis=1, dtype=jnp.int32), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.int32), jnp.arange(kp // k_block))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k_block"))
+def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
+                        k_block: int = 128) -> jax.Array:
+    """TPU-native SC-GEMM: MXU matmul term + VPU clamped-min residual.
+
+    Bit-identical to :func:`sc_matmul_reference` (tests assert exact equality
+    of the integer counts).
+    """
+    half = stream_length(bits) // 2
+    qa = quantize_sign_magnitude(a, bits=bits)
+    qb = quantize_sign_magnitude(b, bits=bits)
+
+    msb = (qb.mag >= half).astype(jnp.int32)
+    # --- MXU term: (s_x · ⌊x/2⌋) @ (s_y · msb). Exact in fp32 for K < ~2^17.
+    lhs = (qa.sign.astype(jnp.int32) * (qa.mag // 2)).astype(jnp.float32)
+    rhs = (qb.sign.astype(jnp.int32) * msb).astype(jnp.float32)
+    term1 = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    # --- VPU residual.
+    term2 = sc_residual_term(qa.sign, qa.mag, qb.sign, qb.mag, bits, k_block)
+    counts = term1 + term2.astype(jnp.float32)
+    nn = stream_length(bits)
+    return counts * (nn * qa.scale * qb.scale)
+
+
+def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
+              impl: str = "mxu_split") -> jax.Array:
+    """Dispatching entry point. ``impl`` ∈ {"reference", "mxu_split", "pallas"}."""
+    if impl == "reference":
+        return sc_matmul_reference(a, b, bits=bits)
+    if impl == "mxu_split":
+        return sc_matmul_mxu_split(a, b, bits=bits)
+    if impl == "pallas":
+        from repro.kernels.ops import sc_matmul_pallas
+        return sc_matmul_pallas(a, b, bits=bits)
+    raise ValueError(f"unknown impl {impl!r}")

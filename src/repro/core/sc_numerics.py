@@ -1,0 +1,53 @@
+"""Quantization and value-domain mappings for SC-GEMM.
+
+The paper's multiplier operates on unipolar magnitudes ``x/N ∈ [0, 1)``.
+Neural-network tensors are signed reals, so SC-GEMM uses a sign-magnitude
+mapping: ``v ≈ sign(v) · mag · Δ`` with ``mag ∈ [0, N)`` an integer magnitude
+and ``Δ`` a per-tensor (or per-channel) scale. Signs multiply via XOR (exact);
+magnitudes multiply through the stochastic multiplier.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tcu import stream_length
+
+__all__ = ["SignMagnitude", "quantize_sign_magnitude", "dequantize_sign_magnitude"]
+
+
+class SignMagnitude(NamedTuple):
+    """Sign-magnitude quantized tensor.
+
+    ``sign``  — int8, values in {+1, -1} (zero magnitude makes sign irrelevant)
+    ``mag``   — int32 magnitudes in ``[0, 2**bits - 1]``
+    ``scale`` — float32 scale(s); broadcastable against ``mag``
+    ``bits``  — static operand width B
+    """
+    sign: jax.Array
+    mag: jax.Array
+    scale: jax.Array
+    bits: int
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "axis"))
+def quantize_sign_magnitude(v: jax.Array, *, bits: int,
+                            axis: int | tuple | None = None) -> SignMagnitude:
+    """Abs-max sign-magnitude quantization to B-bit magnitudes.
+
+    ``axis=None`` -> per-tensor scale; otherwise the scale is reduced over
+    ``axis`` (e.g. per-output-channel for weights).
+    """
+    n_max = stream_length(bits) - 1
+    absmax = jnp.max(jnp.abs(v), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(absmax, 1e-12).astype(jnp.float32) / n_max
+    mag = jnp.clip(jnp.round(jnp.abs(v) / scale), 0, n_max).astype(jnp.int32)
+    sign = jnp.where(v < 0, -1, 1).astype(jnp.int8)
+    return SignMagnitude(sign=sign, mag=mag, scale=scale, bits=bits)
+
+
+def dequantize_sign_magnitude(q: SignMagnitude) -> jax.Array:
+    return (q.sign.astype(jnp.float32) * q.mag.astype(jnp.float32)) * q.scale

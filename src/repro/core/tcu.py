@@ -1,0 +1,108 @@
+"""Transition-coded-unary (TCU) decoding and the bit-position correlation encoder.
+
+This module is the bit-level ("RTL-faithful") model of the paper's multiplier
+front-end. Streams are represented two ways:
+
+* **unpacked** — int8/int32 arrays of shape ``(..., N)`` with stream position
+  ``i`` (1-indexed from the trailing end, as in the paper's ``[x^N .. x^1]``
+  notation) stored at array index ``i-1``;
+* **packed** — ``uint32`` words of shape ``(..., N//32)`` (N >= 32), bit ``i``
+  of the stream at bit ``(i-1) % 32`` of word ``(i-1) // 32``. Packed form is
+  what the Pallas bit-parallel kernel consumes.
+
+All functions are jit-friendly (static ``bits`` argument, no data-dependent
+shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "stream_length",
+    "tcu_decode",
+    "correlation_encode",
+    "pack_stream",
+    "unpack_stream",
+    "popcount_u32",
+]
+
+
+def stream_length(bits: int) -> int:
+    """N = 2**B, the stochastic-bitstream length for B-bit operands."""
+    if bits < 1:
+        raise ValueError(f"operand width must be >= 1, got {bits}")
+    return 1 << bits
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dtype"))
+def tcu_decode(x: jax.Array, *, bits: int, dtype=jnp.int8) -> jax.Array:
+    """B-to-TCU decoder: integer ``x`` in [0, 2**bits) -> thermometer stream.
+
+    Ones are grouped at the trailing end: position ``i`` is 1 iff ``i <= x``.
+    Output shape is ``x.shape + (N,)`` with N = 2**bits.
+    """
+    n = stream_length(bits)
+    pos = jnp.arange(1, n + 1, dtype=jnp.int32)
+    return (pos <= x[..., None].astype(jnp.int32)).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dtype"))
+def correlation_encode(y: jax.Array, *, bits: int, dtype=jnp.int8) -> jax.Array:
+    """Bit-position correlation encoder for operand Y (the paper's AND/OR array).
+
+    The low B-1 bits of ``y`` are TCU-decoded to a thermometer ``t`` of N/2
+    bits; together with the MSB ``y^B`` they form the N-bit stream::
+
+        Y_u[2k]   = y^B OR  t_k          (even positions,  k = 1..N/2)
+        Y_u[2k-1] = y^B AND t_{k-1}      (odd positions,   t_0 = 0)
+
+    The result is value-preserving (``popcount(Y_u) == y``) and satisfies the
+    deterministic correlation condition P(Y_u|X_u) = P(X_u) against thermometer
+    X_u streams. Validated bit-for-bit against the paper's Table I.
+    """
+    n = stream_length(bits)
+    half = n // 2
+    y = y.astype(jnp.int32)
+    msb = (y >= half).astype(jnp.int32)
+    y_low = jnp.where(msb == 1, y - half, y)
+
+    k = jnp.arange(1, half + 1, dtype=jnp.int32)          # k = 1..N/2
+    t_k = (k <= y_low[..., None]).astype(jnp.int32)       # t_k
+    t_km1 = ((k - 1) <= y_low[..., None]).astype(jnp.int32) * (k > 1)  # t_{k-1}, t_0 = 0
+
+    even = msb[..., None] | t_k                            # position 2k -> index 2k-1
+    odd = msb[..., None] & t_km1                           # position 2k-1 -> index 2k-2
+
+    out = jnp.stack([odd, even], axis=-1).reshape(*y.shape, n)
+    return out.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pack_stream(stream: jax.Array) -> jax.Array:
+    """Pack an unpacked ``(..., N)`` 0/1 stream into ``(..., N//32)`` uint32 words."""
+    n = stream.shape[-1]
+    if n % 32 != 0:
+        raise ValueError(f"stream length {n} is not a multiple of 32")
+    words = stream.reshape(*stream.shape[:-1], n // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (words * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def unpack_stream(packed: jax.Array, dtype=jnp.int8) -> jax.Array:
+    """Inverse of :func:`pack_stream`."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*packed.shape[:-1], packed.shape[-1] * 32).astype(dtype)
+
+
+def popcount_u32(x: jax.Array) -> jax.Array:
+    """SWAR population count of each uint32 lane (no lookup tables, VPU-friendly)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic sharded token streams (synthetic + file-backed)."""
+from .pipeline import PipelineConfig, TokenPipeline
+from .tokenizer import ByteTokenizer

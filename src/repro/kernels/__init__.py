@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the SC multiplier
+inside GEMM): sc_matmul (MXU/VPU split) and sc_bitops (bit-parallel packed
+datapath). ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles."""
+from . import ops, ref

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels: padding, quantization,
+dequantization, and CPU-interpret fallback.
+
+On non-TPU backends (this container) kernels run with ``interpret=True``,
+which executes the kernel body in Python on CPU — bit-identical semantics,
+used by the test suite. On TPU the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sc_numerics import quantize_sign_magnitude
+from repro.core.tcu import stream_length
+from .sc_matmul import sc_matmul_counts_pallas
+from .sc_bitops import sc_stream_mul_pallas
+
+__all__ = ["sc_matmul_pallas", "sc_stream_mul", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(arr, mult, axis, value=0):
+    pad = (-arr.shape[axis]) % mult
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
+                     bm: int = 128, bn: int = 128, bk: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """SC-GEMM ``a @ b`` through the Pallas kernel. ``a: (M, K)``, ``b: (K, N)``."""
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    _, n = b.shape
+    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits)
+    qb = quantize_sign_magnitude(b.astype(jnp.float32), bits=bits)
+    # zero magnitude ⇒ padded K contributes nothing; signs pad with +1.
+    sx = _pad_to(_pad_to(qa.sign.astype(jnp.int32), bm, 0, 1), bk, 1, 1)
+    mx = _pad_to(_pad_to(qa.mag, bm, 0), bk, 1)
+    sy = _pad_to(_pad_to(qb.sign.astype(jnp.int32), bk, 0, 1), bn, 1, 1)
+    my = _pad_to(_pad_to(qb.mag, bk, 0), bn, 1)
+    counts = sc_matmul_counts_pallas(sx, mx, sy, my, bits=bits,
+                                     bm=bm, bn=bn, bk=bk, interpret=interpret)
+    counts = counts[:m, :n]
+    return counts * (stream_length(bits) * qa.scale * qb.scale)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def sc_stream_mul(x: jax.Array, y: jax.Array, *, bits: int = 8,
+                  interpret: bool | None = None) -> jax.Array:
+    """Elementwise bit-parallel stochastic multiply of flat int32 arrays."""
+    if interpret is None:
+        interpret = default_interpret()
+    orig = x.shape
+    flat_x = x.reshape(-1)
+    flat_y = y.reshape(-1)
+    xg = _pad_to(flat_x, 128 * 8, 0).reshape(-1, 128)
+    yg = _pad_to(flat_y, 128 * 8, 0).reshape(-1, 128)
+    out = sc_stream_mul_pallas(xg.astype(jnp.int32), yg.astype(jnp.int32),
+                               bits=bits, interpret=interpret)
+    return out.reshape(-1)[: flat_x.shape[0]].reshape(orig)

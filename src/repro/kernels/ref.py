@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels. Kernel tests sweep shapes/dtypes
+and assert_allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multipliers import proposed_closed_form
+from repro.core.sc_numerics import quantize_sign_magnitude
+from repro.core.tcu import (correlation_encode, pack_stream, popcount_u32,
+                            stream_length, tcu_decode)
+
+__all__ = ["sc_matmul_counts_ref", "sc_matmul_ref", "sc_stream_mul_ref",
+           "sc_stream_words_ref"]
+
+
+def sc_matmul_counts_ref(sx, mx, sy, my, bits: int) -> jnp.ndarray:
+    """Signed SC-GEMM counts Σ_k s_x s_y O(x, y) — int32 (M, N) oracle."""
+    o = proposed_closed_form(mx[:, :, None], my[None, :, :], bits=bits)
+    s = sx[:, :, None].astype(jnp.int32) * sy[None, :, :].astype(jnp.int32)
+    return (s * o).sum(axis=1, dtype=jnp.int32)
+
+
+def sc_matmul_ref(a, b, bits: int = 8) -> jnp.ndarray:
+    """Float-in/float-out SC-GEMM oracle (quantize -> counts -> dequantize)."""
+    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits)
+    qb = quantize_sign_magnitude(b.astype(jnp.float32), bits=bits)
+    counts = sc_matmul_counts_ref(qa.sign, qa.mag, qb.sign, qb.mag, bits)
+    return counts.astype(jnp.float32) * (stream_length(bits) * qa.scale * qb.scale)
+
+
+def sc_stream_mul_ref(x, y, bits: int) -> jnp.ndarray:
+    """Bit-level elementwise stream multiplier oracle: popcount(X_u & Y_u)."""
+    xu = tcu_decode(x, bits=bits, dtype=jnp.int32)
+    yu = correlation_encode(y, bits=bits, dtype=jnp.int32)
+    return (xu & yu).sum(axis=-1, dtype=jnp.int32)
+
+
+def sc_stream_words_ref(x, y, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Packed uint32 stream words for X_u and Y_u (oracle for in-kernel packing)."""
+    xw = pack_stream(tcu_decode(x, bits=bits, dtype=jnp.int32))
+    yw = pack_stream(correlation_encode(y, bits=bits, dtype=jnp.int32))
+    return xw, yw
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Naive attention oracle for the Pallas flash kernel.
+
+    ``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)`` (GQA broadcast)."""
+    b, h, sq, d = q.shape
+    _, kv, skv, _ = k.shape
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

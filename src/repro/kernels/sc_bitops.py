@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: the bit-parallel datapath itself, bit-packed.
+
+This kernel is the RTL-faithful half of the story: it materializes the paper's
+N-bit streams as packed 32-bit words *inside* the kernel (B-to-TCU decoder and
+the AND/OR correlation encoder become integer lane ops), ANDs them, and
+popcounts — i.e. the literal bit-parallel multiplier, vectorized across VPU
+lanes. It exists to prove on-device bit-exactness of the closed form used by
+the fast SC-GEMM kernel; the closed form wins on throughput by ~2^B/3.
+
+Layout: operands arrive as (rows, 128) int32 tiles (TPU-native lane shape).
+For each of the N/32 words the kernel rebuilds both streams' word, ANDs, and
+SWAR-popcounts. All ops are elementwise int32 — pure VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sc_stream_mul_pallas"]
+
+
+def _popcount32(v):
+    v = v - ((v >> 1) & 0x55555555)
+    v = (v & 0x33333333) + ((v >> 2) & 0x33333333)
+    v = (v + (v >> 4)) & 0x0F0F0F0F
+    return (v * 0x01010101) >> 24
+
+
+def _thermo_word(x, w):
+    """uint-style word w (bits j=0..31 ~ positions 32w+1 .. 32w+32) of the
+    thermometer stream of x: ones at positions i <= x."""
+    rem = jnp.clip(x - 32 * w, 0, 32)
+    # (1 << rem) - 1 without overflow at rem == 32:
+    full = jnp.int32(-1)  # 0xFFFFFFFF
+    return jnp.where(rem >= 32, full,
+                     (jnp.int32(1) << rem) - 1)
+
+
+def _correlation_word(y, w, bits):
+    """Word w of the correlation-encoded stream Y_u (DESIGN.md §1):
+
+        position 2k   -> msb | (k <= y_low)
+        position 2k-1 -> msb & (k >= 2) & (k <= y_low + 1)
+    """
+    half = (1 << bits) // 2
+    msb = (y >= half).astype(jnp.int32)
+    y_low = y - msb * half
+    word = jnp.zeros_like(y)
+    for j in range(32):
+        # position (1-based) = 32*w + j + 1; w is a traced scalar
+        pos = 32 * w + (j + 1)
+        is_even = (j + 1) % 2 == 0  # parity of pos == parity of j+1 (32w even)
+        if is_even:
+            k = pos // 2
+            bit = msb | (k <= y_low).astype(jnp.int32)
+        else:
+            k = (pos + 1) // 2
+            bit = msb * ((k >= 2) & (k <= y_low + 1)).astype(jnp.int32)
+        word = word | (bit << j)
+    return word
+
+
+def _kernel(bits: int, x_ref, y_ref, out_ref):
+    n_words = (1 << bits) // 32
+    x = x_ref[...].astype(jnp.int32)
+    y = y_ref[...].astype(jnp.int32)
+
+    def body(w, acc):
+        xw = _thermo_word(x, w)
+        yw = _correlation_word(y, w, bits)
+        return acc + _popcount32(xw & yw)
+
+    out_ref[...] = jax.lax.fori_loop(0, n_words, body, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows", "interpret"))
+def sc_stream_mul_pallas(x: jax.Array, y: jax.Array, *, bits: int = 8,
+                         block_rows: int = 8, interpret: bool = False) -> jax.Array:
+    """Elementwise bit-parallel stochastic multiply of int32 tiles.
+
+    ``x, y: (rows, 128)`` int32 magnitudes in [0, 2**bits); returns int32
+    popcounts O(x, y). ``bits`` must be >= 5 so the stream fills 32-bit words.
+    """
+    assert bits >= 5, "packed kernel needs streams of >= 32 bits"
+    rows, lanes = x.shape
+    assert lanes == 128 and rows % block_rows == 0, (rows, lanes)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 128), jnp.int32),
+        interpret=interpret,
+    )(x, y)

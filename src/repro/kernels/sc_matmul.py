@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: SC-GEMM with the MXU/VPU split.
+
+The paper's multiplier inside a GEMM decomposes per DESIGN.md §2.1 as
+
+    O(x, y) = msb_y · ⌊x/2⌋  +  clamp(min(y_low, ⌊(x − msb_y)/2⌋), 0)
+    Σ_k s_x s_y O  =  (s_x·⌊x/2⌋) @ (s_y·msb_y)   ← MXU matmul term
+                    + Σ_k s_x s_y · residual(x, y)  ← VPU elementwise term
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the
+fp32 accumulator lives in a VMEM scratch tile across K steps. MXU dims are
+128-aligned by the ops.py wrapper. The residual loops over the K block with a
+(bm, bn) vector op per k — pure VPU work with no (bm, bk, bn) blow-up, keeping
+the VMEM working set at
+
+    bm·bk (lhs mag+sign) + bk·bn (rhs) + bm·bn (acc + out)  ≈
+    2·128·512·4B + 2·512·128·4B + 2·128·128·4B ≈ 1.2 MiB « 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sc_matmul_counts_pallas"]
+
+
+def _kernel(bits: int, bk: int, nsteps: int,
+            sx_ref, mx_ref, sy_ref, my_ref, out_ref, acc_ref):
+    """One (bm, bn) output tile; K accumulated across grid steps via scratch."""
+    half = (1 << bits) // 2
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mx = mx_ref[...].astype(jnp.int32)          # (bm, bk) magnitudes of A
+    sx = sx_ref[...].astype(jnp.int32)          # (bm, bk) signs {+1,-1}
+    my = my_ref[...].astype(jnp.int32)          # (bk, bn)
+    sy = sy_ref[...].astype(jnp.int32)
+
+    msb = (my >= half).astype(jnp.int32)
+    y_low = my - msb * half
+
+    # ---- MXU term: (s_x · ⌊x/2⌋) @ (s_y · msb). Exact in fp32 (counts < 2^24).
+    lhs = (sx * (mx // 2)).astype(jnp.float32)
+    rhs = (sy * msb).astype(jnp.float32)
+    acc = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+
+    # ---- VPU residual: one (bm, bn) vector op per k in the block.
+    sx_f = sx.astype(jnp.float32)
+    sy_f = sy.astype(jnp.float32)
+
+    def body(k, res):
+        x_k = jax.lax.dynamic_slice_in_dim(mx, k, 1, axis=1)       # (bm, 1)
+        m_k = jax.lax.dynamic_slice_in_dim(msb, k, 1, axis=0)      # (1, bn)
+        yl_k = jax.lax.dynamic_slice_in_dim(y_low, k, 1, axis=0)   # (1, bn)
+        r = jnp.maximum(jnp.minimum(yl_k, (x_k - m_k) // 2), 0)
+        s = (jax.lax.dynamic_slice_in_dim(sx_f, k, 1, axis=1) *
+             jax.lax.dynamic_slice_in_dim(sy_f, k, 1, axis=0))
+        return res + s * r.astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(0, bk, body, acc)
+    acc_ref[...] += acc
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+def sc_matmul_counts_pallas(sx, mx, sy, my, *, bits: int = 8,
+                            bm: int = 128, bn: int = 128, bk: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """Signed SC-GEMM counts (float32 (M, N), exact integers) via Pallas.
+
+    Inputs must be pre-padded to multiples of the block sizes (ops.py does
+    this): ``sx, mx: (M, K)`` int8/int32; ``sy, my: (K, N)``.
+    """
+    m, k = mx.shape
+    k2, n = my.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"unpadded shapes ({m},{k})x({k2},{n}) for blocks ({bm},{bn},{bk})")
+    nsteps = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits, bk, nsteps),
+        grid=(m // bm, n // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),   # sx
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),   # mx
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),   # sy
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),   # my
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(sx, mx, sy, my)

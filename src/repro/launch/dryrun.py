@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input-shape)
+on the production meshes, proving the distribution config is coherent without
+hardware. Records memory_analysis / cost_analysis / collective-byte accounting
+per cell into experiments/dryrun/*.json — the §Roofline table reads from these.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.registry import ARCHS                          # noqa: E402
+from repro.configs.shapes import SHAPES, input_specs, is_applicable  # noqa: E402
+from repro.launch import steps as step_builders                   # noqa: E402
+from repro.launch.hlo_analysis import parse_collective_bytes, roofline_terms  # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.launch.modelmeta import model_flops, param_counts      # noqa: E402
+from repro.models import bind                                     # noqa: E402
+from repro.parallel.sharding import (batch_pspecs, cache_pspecs,  # noqa: E402
+                                     named, param_pspecs)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _with_shardings(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    """``overrides``: dataclasses.replace fields for §Perf hillclimb variants."""
+    import dataclasses
+    cfg = ARCHS[arch]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind, "status": "skipped",
+              "overrides": overrides or {}}
+
+    ok, reason = is_applicable(cfg, shape)
+    if not ok:
+        record["reason"] = reason
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        jitted, shardings, (params_abs, opt_abs), optc = \
+            step_builders.build_train_step(cfg, mesh)
+        batch_abs = input_specs(cfg, shape)
+        args = (_with_shardings(params_abs, shardings["params"]),
+                _with_shardings(opt_abs, shardings["opt"]),
+                _with_shardings(batch_abs, shardings["batch_fn"](batch_abs)))
+        lowered = jitted.lower(*args)
+    elif shape.kind == "prefill":
+        jitted, shardings, params_abs = step_builders.build_prefill_step(
+            cfg, mesh, batch_size=shape.global_batch, seq_len=shape.seq_len)
+        batch_abs = input_specs(cfg, shape)
+        args = (_with_shardings(params_abs, shardings["params"]),
+                _with_shardings(batch_abs, shardings["batch_fn"](batch_abs)))
+        lowered = jitted.lower(*args)
+    else:  # decode
+        jitted, shardings, params_abs = step_builders.build_decode_step(
+            cfg, mesh, batch_size=shape.global_batch, seq_len=shape.seq_len)
+        m = bind(cfg)
+        cache_abs = jax.eval_shape(
+            lambda: m.init_cache(shape.global_batch, shape.seq_len))
+        batch_abs = input_specs(cfg, shape)
+        args = (_with_shardings(params_abs, shardings["params"]),
+                _with_shardings(cache_abs, shardings["cache"]),
+                _with_shardings(batch_abs, shardings["batch_fn"](batch_abs)))
+        lowered = jitted.lower(*args)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(compiled.memory_analysis())
+    cost = compiled.cost_analysis()
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")}
+          if hasattr(cost, "get") else cost)
+
+    hlo_text = compiled.as_text()
+    mf = model_flops(cfg, shape)
+    rl = roofline_terms(compiled, n_chips=n_chips, model_flops=mf,
+                        hlo_text=hlo_text)
+    coll = parse_collective_bytes(hlo_text)
+
+    record.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "param_counts": param_counts(cfg),
+        "model_flops": mf,
+        "roofline": rl.to_dict(),
+        "collectives_by_kind": {k: float(v) for k, v in coll.by_kind.items()},
+    })
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = sorted(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = out_dir / f"{tag}.json"
+                try:
+                    rec = run_cell(arch, shape, multi)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "pod2x16x16" if multi else "pod16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" compute={r['compute_s']:.3e}s"
+                             f" mem={r['memory_s']:.3e}s"
+                             f" coll={r['collective_s']:.3e}s"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""Post-partitioning HLO analysis: collective-byte accounting with while-loop
+trip-count multiplication, plus the three-term roofline model.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective traffic, so
+we parse ``compiled.as_text()``: every ``all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute`` contributes its *result
+shape* bytes (documented convention: equals operand bytes for all-reduce /
+collective-permute / all-to-all; the full gathered size for all-gather; the
+pre-reduce size is not printed for reduce-scatter so its result bytes
+understate by the shard count — noted). Ops inside ``while`` bodies are
+multiplied by the loop trip count, recovered from the loop condition's
+comparison constant — exact for ``lax.scan``-generated loops, which is every
+loop in this codebase (layer groups, loss chunks, flash-attention blocks).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (3D-torus links; we model the per-chip ICI budget as one link's worth,
+conservative for multi-link meshes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["CollectiveStats", "parse_collective_bytes", "Roofline",
+           "roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link per chip
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVE_OP = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:calls|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(prefix: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(prefix):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    total_bytes: float = 0.0
+    by_kind: dict = field(default_factory=dict)
+    op_count: int = 0
+    flops: float = 0.0          # dot FLOPs with loop multiplication
+    hbm_bytes: float = 0.0      # operand+result bytes with loop multiplication
+
+    def add(self, kind: str, nbytes: float, times: float = 1.0):
+        self.total_bytes += nbytes * times
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + nbytes * times
+        self.op_count += 1
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """HLO pretty-printer convention: computation headers sit at column 0 and
+    end with '{'; instructions are indented; '}' at column 0 closes."""
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if not line:
+            continue
+        if line[0] not in " \t":
+            if line.rstrip().endswith("{"):
+                header = line.strip()
+                if header.startswith("ENTRY "):
+                    header = header[len("ENTRY "):]
+                name = re.split(r"[\s(]", header.lstrip("%"), maxsplit=1)[0]
+                current = name
+                comps[current] = []
+            elif line.strip() == "}":
+                current = None
+            continue
+        if current is not None:
+            comps[current].append(line.strip())
+    return comps
+
+
+_NAME_SHAPE_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(.*)$")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_FREE_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "copy(", "after-all(", "iota(")
+
+# elementwise / layout ops that XLA:TPU fuses into neighboring barrier ops
+# (dots, collectives, fusions); counted as HBM-free (DESIGN.md convention)
+_FUSABLE_OPS = (
+    "add(", "subtract(", "multiply(", "divide(", "maximum(", "minimum(",
+    "exponential(", "tanh(", "logistic(", "rsqrt(", "sqrt(", "negate(",
+    "abs(", "sign(", "floor(", "ceil(", "power(", "log(", "log-plus-one(",
+    "exponential-minus-one(", "and(", "or(", "xor(", "not(", "select(",
+    "compare(", "convert(", "broadcast(", "reshape(", "transpose(", "pad(",
+    "slice(", "reverse(", "clamp(", "reduce(", "shift-left(",
+    "shift-right-logical(", "shift-right-arithmetic(", "is-finite(",
+    "round-nearest-afz(", "round-nearest-even(", "rem(", "atan2(", "cosine(",
+    "sine(", "expm1(", "log1p(", "real(", "imag(", "map(", "sort(",
+)
+
+
+def _line_parts(line: str):
+    """-> (result_name, type_text, op_text) or None."""
+    m = _NAME_SHAPE_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # type text runs until the op token (first word followed by '(')
+    op_m = re.search(r"([a-z][\w\-\$]*)\(", rest)
+    if not op_m:
+        return None
+    return name, rest[: op_m.start()], rest[op_m.start():]
+
+
+def _operand_names(op_text: str) -> list[str]:
+    depth0 = op_text.find("(")
+    # take names up to matching close paren of the op's operand list
+    names = []
+    depth = 0
+    token = ""
+    for ch in op_text[depth0:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        if ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            token += ch
+    for part in token.split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            names.append(part[1:])
+    return names
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Walk the partitioned module: collective bytes, dot FLOPs, and an
+    operand+result HBM-byte model — all with while-loop trip multiplication
+    (exact for lax.scan loops; XLA's own cost_analysis counts loop bodies
+    once, which undercounts scanned-layer models by ~n_layers)."""
+    comps = _split_computations(hlo_text)
+
+    shapes: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        table = {}
+        for line in lines:
+            parts = _line_parts(line)
+            if parts:
+                table[parts[0]] = parts[1]
+        shapes[cname] = table
+
+    def cond_trip(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    memo: dict[str, CollectiveStats] = {}
+
+    def analyze(name: str, depth: int = 0) -> CollectiveStats:
+        if name in memo:
+            return memo[name]
+        stats = CollectiveStats()
+        memo[name] = stats            # break cycles defensively
+        if depth > 60:
+            return stats
+        table = shapes.get(name, {})
+        for line in comps.get(name, []):
+            parts = _line_parts(line)
+            if parts is None:
+                continue
+            _, type_text, op_text = parts
+
+            # ---- while loops: recurse with trip multiplication
+            if op_text.startswith("while("):
+                body = _CALL_RE.search(line)
+                cond = _COND_RE.search(line)
+                if body:
+                    trips = cond_trip(cond.group(1)) if cond else 1
+                    sub = analyze(body.group(1), depth + 1)
+                    for k, v in sub.by_kind.items():
+                        stats.add(k, v, trips)
+                    stats.flops += sub.flops * trips
+                    stats.hbm_bytes += sub.hbm_bytes * trips
+                continue
+
+            # ---- fusions: internals are HBM-free (that is what fusion means);
+            # only the fusion's operands+result cross HBM. Dot FLOPs inside
+            # still count. In-place slice-update fusions alias their big
+            # accumulator operand (XLA donation/aliasing): traffic is the
+            # slice, not the buffer — subtract the aliased operand+result.
+            if op_text.startswith("fusion("):
+                for cm in _CALL_RE.finditer(line):
+                    sub = analyze(cm.group(1), depth + 1)
+                    for k, v in sub.by_kind.items():
+                        stats.add(k, v)
+                    stats.flops += sub.flops
+                result_b = _shape_bytes(type_text)
+                op_bytes = [_shape_bytes(table.get(o, ""))
+                            for o in _operand_names(op_text)]
+                if "dynamic-update-slice" in line or "dynamic_update_slice" in line:
+                    # aliased accumulator: traffic ~ 2x the update slice
+                    big = max(op_bytes, default=0)
+                    stats.hbm_bytes += 2 * max(sum(op_bytes) - big, 0)
+                elif "dynamic-slice" in line:
+                    stats.hbm_bytes += 2 * result_b
+                else:
+                    stats.hbm_bytes += sum(op_bytes) + result_b
+                continue
+            if op_text.startswith(("call(", "conditional(")):
+                for cm in _CALL_RE.finditer(line):
+                    sub = analyze(cm.group(1), depth + 1)
+                    for k, v in sub.by_kind.items():
+                        stats.add(k, v)
+                    stats.flops += sub.flops
+                    stats.hbm_bytes += sub.hbm_bytes
+                continue
+
+            # ---- collectives
+            m = _COLLECTIVE_OP.match(" " + op_text)
+            if m:
+                nbytes = _shape_bytes(type_text)
+                if m.group(2):       # -start prints (operand, result) tuple
+                    nbytes //= 2
+                stats.add(m.group(1), nbytes)
+                stats.hbm_bytes += 2 * nbytes
+                continue
+
+            # ---- dots
+            if op_text.startswith("dot("):
+                result_elems = _shape_bytes(type_text)
+                # recover element count from bytes: divide by dtype width
+                sm = _SHAPE_RE.search(type_text)
+                width = _DTYPE_BYTES.get(sm.group(1), 4) if sm else 4
+                result_count = result_elems // max(width, 1)
+                k_prod = 1
+                dm = _DOT_DIMS_RE.search(line)
+                ops = _operand_names(op_text)
+                if dm and ops:
+                    lhs_shape_text = table.get(ops[0], "")
+                    lm = _SHAPE_RE.search(lhs_shape_text)
+                    if lm:
+                        dims = [int(d) for d in lm.group(2).split(",") if d.strip()]
+                        for ci in dm.group(1).split(","):
+                            if ci.strip() and int(ci) < len(dims):
+                                k_prod *= dims[int(ci)]
+                stats.flops += 2.0 * result_count * k_prod
+                opb = sum(_shape_bytes(table.get(o, "")) for o in ops)
+                stats.hbm_bytes += opb + result_elems
+                continue
+
+            # ---- slicing ops touch only the slice, not the carried buffer
+            if op_text.startswith(("dynamic-slice(", "gather(")):
+                stats.hbm_bytes += 2 * _shape_bytes(type_text)
+                continue
+            if op_text.startswith(("dynamic-update-slice(", "scatter(")):
+                ops = _operand_names(op_text)
+                upd = _shape_bytes(table.get(ops[1], "")) if len(ops) > 1 else 0
+                stats.hbm_bytes += 2 * upd
+                continue
+
+            # ---- everything else. CPU HLO fuses far less than TPU, so plain
+            # elementwise/layout ops are modeled as fusing into the adjacent
+            # barrier ops (dot/collective/fusion/slice) — they contribute no
+            # HBM traffic of their own. Ops that are real data movement or
+            # reductions on TPU still count operand+result.
+            if op_text.startswith(_FREE_OPS) or op_text.startswith(_FUSABLE_OPS):
+                continue
+            opb = sum(_shape_bytes(table.get(o, "")) for o in _operand_names(op_text))
+            stats.hbm_bytes += opb + _shape_bytes(type_text)
+        return stats
+
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return analyze(entry) if entry else CollectiveStats()
+
+
+# ------------------------------------------------------------------ roofline
+
+@dataclass
+class Roofline:
+    """All byte/FLOP quantities are PER-CHIP (the partitioned HLO module is
+    the per-device program; verified empirically — see EXPERIMENTS.md §Dry-run
+    conventions). ``model_flops`` is the GLOBAL useful 6·N·D count."""
+    flops: float               # per-chip HLO FLOPs
+    hbm_bytes: float           # per-chip HBM traffic
+    collective_bytes: float    # per-chip collective traffic
+    n_chips: int
+    model_flops: float = 0.0   # global 6·N·D (or 6·N_active·D)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        per_chip_useful = self.model_flops / max(self.n_chips, 1)
+        return per_chip_useful / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization bound implied by the three terms (an MFU
+        upper bound: useful FLOP rate / peak, at the roofline step time)."""
+        if self.step_time_s == 0:
+            return 0.0
+        per_chip_useful = self.model_flops / max(self.n_chips, 1)
+        return (per_chip_useful / self.step_time_s) / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes, "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(compiled, *, n_chips: int, model_flops: float,
+                   hlo_text: str | None = None) -> Roofline:
+    """FLOPs/bytes come from our HLO walk (loop-trip-aware); XLA's
+    cost_analysis (which counts while bodies once) is kept as a cross-check
+    lower bound — we take the max of the two per term."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collective_bytes(text)
+    return Roofline(flops=max(coll.flops, xla_flops),
+                    hbm_bytes=max(coll.hbm_bytes, xla_bytes),
+                    collective_bytes=coll.total_bytes,
+                    n_chips=n_chips, model_flops=model_flops)

@@ -1,0 +1,20 @@
+"""Production mesh construction (a FUNCTION, never module-level state — jax
+device initialization must stay under the caller's control)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with the leading "pod"
+    axis. The dry-run proves both shard every assigned (arch x shape)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (elastic restarts use this with the survivor grid)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,60 @@
+"""Parameter counts and MODEL_FLOPS (the roofline's useful-work numerator).
+
+Conventions (EXPERIMENTS.md §Roofline): N = matmul-participating params —
+embedding *tables* excluded (gathers), LM head included (it is a matmul; for
+tied embeddings the table is counted once here). MoE experts count at
+``top_k / n_experts`` of their parameters (active-path FLOPs), shared experts
+fully. MODEL_FLOPS = 6·N·tokens for training, 2·N·tokens for inference
+(decode: tokens = batch, one step). Attention score/value FLOPs are excluded
+by this convention — they surface in the MODEL_FLOPS/HLO_FLOPs ratio instead.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import Shape
+
+__all__ = ["param_counts", "model_flops"]
+
+
+def _leaf_size(x) -> int:
+    n = 1
+    for d in x.shape:
+        n *= d
+    return n
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """{"total": all params, "active": matmul-active params per token}."""
+    from .steps import abstract_params
+    params = abstract_params(cfg)
+    total = active = embed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        size = _leaf_size(leaf)
+        total += size
+        name = str(keys[-1]) if keys else ""
+        if name == "embed":
+            embed += size
+            if cfg.tie_embeddings and not cfg.n_codebooks:
+                active += size          # reused as the LM-head matmul
+            continue
+        if "moe" in [str(k) for k in keys] and name in ("w1", "w2", "w3"):
+            active += size * cfg.top_k / max(cfg.n_experts, 1)
+            continue
+        active += size
+    return {"total": total, "active": active, "embedding": embed}
+
+
+def model_flops(cfg: ModelConfig, shape: Shape) -> float:
+    counts = param_counts(cfg)
+    n = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,195 @@
+"""Jitted step builders shared by train.py, serve.py and dryrun.py.
+
+Each builder returns ``(step_fn, in_shardings, out_shardings, donate)`` ready
+for ``jax.jit(...).lower(...)`` — the dry-run AOT-compiles exactly what the
+drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import bind
+from repro.optim import AdamWConfig, apply_updates, init as opt_init
+from repro.optim.adamw import Quantized8
+from repro.optim.schedules import warmup_cosine
+from repro.parallel.context import activation_sharding_scope
+from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
+                                     param_pspecs)
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "abstract_params", "abstract_opt_state", "activation_spec",
+           "opt_pspecs"]
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+
+
+def activation_spec(mesh: Mesh, strategy: str = "tp_sp") -> P:
+    """Residual stream (B, S, d): batch over data axes, sequence over model
+    (sequence parallelism) — see parallel/context.py. The "dp" strategy
+    spreads batch over every axis instead (no TP/SP collectives)."""
+    if strategy == "dp":
+        axes = _data_axes(mesh) or ()
+        axes = tuple(axes) + ("model",) if "model" in mesh.axis_names else axes
+        return P(axes, None, None)
+    return P(_data_axes(mesh), "model", None)
+
+
+def abstract_params(cfg: ModelConfig, key=None):
+    m = bind(cfg)
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: m.init_params(k), key)
+
+
+def abstract_opt_state(cfg: ModelConfig, params, optc: AdamWConfig):
+    return jax.eval_shape(lambda p: opt_init(p, optc), params)
+
+
+def opt_pspecs(cfg: ModelConfig, opt_state, p_specs, mesh: Mesh):
+    """Moments follow their parameter's sharding; quantized moments shard the
+    flat block dim over every mesh axis (pure ZeRO state, no layout affinity).
+    Small tensors whose block count the mesh doesn't divide stay replicated."""
+    from repro.parallel.sharding import fit_spec
+    all_axes = tuple(mesh.axis_names)
+
+    def moments(tree):
+        flat_p, tdef = jax.tree.flatten(
+            tree, is_leaf=lambda x: isinstance(x, Quantized8))
+        flat_spec = tdef.flatten_up_to(p_specs)
+        out = []
+        for leaf, spec in zip(flat_p, flat_spec):
+            if isinstance(leaf, Quantized8):
+                out.append(Quantized8(
+                    q=fit_spec(P(all_axes, None), leaf.q.shape, mesh),
+                    scale=fit_spec(P(all_axes, None), leaf.scale.shape, mesh)))
+            else:
+                out.append(spec)
+        return tdef.unflatten(out)
+
+    return {"m": moments(opt_state["m"]), "v": moments(opt_state["v"]),
+            "step": P()}
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, *,
+                     optc: AdamWConfig | None = None,
+                     peak_lr: float = 3e-4, warmup: int = 100,
+                     total_steps: int = 10_000):
+    """Returns (jitted train_step, shardings dict). Signature:
+    ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+    """
+    m = bind(cfg)
+    optc = optc or AdamWConfig(quantize_moments=cfg.n_experts >= 64)
+    act_spec = activation_spec(mesh, cfg.sharding_strategy)
+
+    params_abs0 = abstract_params(cfg)
+    p_specs0 = param_pspecs(cfg, params_abs0, mesh)
+    grad_sh = named(mesh, p_specs0)
+
+    def train_step(params, opt_state, batch):
+        with activation_sharding_scope(NamedSharding(mesh, act_spec)):
+            loss, grads = jax.value_and_grad(m.loss_fn)(params, batch)
+        # pin gradient layout to the parameter layout — without this the
+        # scan-transpose accumulation buffers for stacked layer grads can
+        # materialize unsharded (hundreds of GB/chip for the MoE configs)
+        grads = jax.lax.with_sharding_constraint(grads, grad_sh)
+        lr = warmup_cosine(opt_state["step"], peak_lr=peak_lr,
+                           warmup_steps=warmup, total_steps=total_steps)
+        new_params, new_opt = apply_updates(params, grads, opt_state, optc, lr)
+        metrics = {"loss": loss, "lr": lr,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)))}
+        return new_params, new_opt, metrics
+
+    params_abs = abstract_params(cfg)
+    opt_abs = abstract_opt_state(cfg, params_abs, optc)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    o_specs = opt_pspecs(cfg, opt_abs, p_specs, mesh)
+
+    from repro.configs.shapes import SHAPES  # avoid cycle at module import
+    dummy_batch = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
+    b_specs_fn = lambda batch: batch_pspecs(cfg, batch, mesh)
+
+    shardings = {
+        "params": named(mesh, p_specs),
+        "opt": named(mesh, o_specs),
+        "batch_fn": lambda batch: named(mesh, b_specs_fn(batch)),
+        "metrics": named(mesh, {"loss": P(), "lr": P(), "grad_norm": P()}),
+    }
+    # explicit out_shardings: donated params/opt alias their inputs and no
+    # unsharded result buffers materialize (memory_analysis counts them)
+    jitted = jax.jit(
+        train_step,
+        donate_argnums=(0, 1),
+        out_shardings=(shardings["params"], shardings["opt"],
+                       shardings["metrics"]),
+    )
+    return jitted, shardings, (params_abs, opt_abs), optc
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                       seq_len: int, extra_slots: int = 0):
+    m = bind(cfg)
+    act_spec = activation_spec(mesh, cfg.sharding_strategy)
+
+    def prefill(params, batch):
+        with activation_sharding_scope(NamedSharding(mesh, act_spec)):
+            return m.prefill_step(params, batch, extra_slots=extra_slots)
+
+    params_abs = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    cache_abs = jax.eval_shape(
+        lambda: m.init_cache(batch_size, seq_len + extra_slots))
+    cache_sh = named(mesh, cache_pspecs(cfg, cache_abs, mesh,
+                                        batch_size=batch_size))
+    data = _data_axes(mesh)
+    from repro.parallel.sharding import fit_spec
+    logits_shape = (batch_size, 1, cfg.vocab_size)
+    logits_sh = NamedSharding(mesh, fit_spec(P(data, None, None),
+                                             logits_shape, mesh))
+    shardings = {
+        "params": named(mesh, p_specs),
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
+        "cache": cache_sh,
+    }
+    jitted = jax.jit(prefill, out_shardings=(logits_sh, cache_sh))
+    return jitted, shardings, params_abs
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                      seq_len: int):
+    m = bind(cfg)
+
+    def decode(params, cache, batch):
+        return m.decode_step(params, cache, batch)
+
+    params_abs = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    cache_abs = jax.eval_shape(lambda: m.init_cache(batch_size, seq_len))
+    cache_sh = named(mesh, cache_pspecs(cfg, cache_abs, mesh,
+                                        batch_size=batch_size))
+    data = _data_axes(mesh)
+    from repro.parallel.sharding import fit_spec
+    if cfg.n_codebooks:
+        logits_shape = (batch_size, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        logits_shape = (batch_size, 1, cfg.vocab_size)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(*((data,) + (None,) * (len(logits_shape) - 1))),
+                       logits_shape, mesh))
+    shardings = {
+        "params": named(mesh, p_specs),
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
+        "cache": cache_sh,
+    }
+    # cache donation aliases in/out (same shardings) — the decode steady state
+    jitted = jax.jit(decode, donate_argnums=(1,),
+                     out_shardings=(logits_sh, cache_sh))
+    return jitted, shardings, params_abs

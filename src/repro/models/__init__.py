@@ -1,0 +1,3 @@
+"""Model substrate: layers, generic transformer (dense/MoE/VLM/audio),
+Mamba-2 SSD, Zamba2 hybrid, and the family dispatcher."""
+from .model_zoo import bind

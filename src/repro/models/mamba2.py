@@ -1,0 +1,199 @@
+"""Mamba-2 (SSD, state-space duality) blocks — arXiv:2405.21060.
+
+The chunked SSD algorithm: sequence split into chunks of length Q; the
+quadratic intra-chunk term and the inter-chunk state recurrence (a
+``lax.scan`` over chunks carrying the (H, P, N) state) together compute the
+selective-SSM exactly. Decode is the O(1) single-token recurrence against the
+carried state, which is why the ssm/hybrid architectures are the ones that run
+the ``long_500k`` shape.
+
+Shapes: d_inner = expand·d_model, heads H = d_inner/headdim, head dim P,
+state dim N = ssm_state. B/C are single-group (broadcast over heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import rms_norm
+
+__all__ = ["init_mamba_params", "mamba_block", "mamba_decode_step",
+           "init_mamba_cache", "MambaCache"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array    # (B, conv_width-1, conv_channels)
+    state: jax.Array   # (B, H, P, N)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    heads = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * n            # conv over [x, B, C]
+    return d_in, heads, n, conv_ch
+
+
+def init_mamba_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    d = cfg.d_model
+    d_in, heads, n, conv_ch = _dims(cfg)
+    proj_out = 2 * d_in + 2 * n + heads      # z, x, B, C, dt
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads, dtype=jnp.float32)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via explicit shifts (width is small, e.g. 4)."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise segment sums: out[..., i, j] = Σ_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x, dt, a_log, bmat, cmat, chunk: int,
+             initial_state=None) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a_log: (H,) (positive);
+    bmat, cmat: (B, L, N). Returns (y: (B, L, H, P), final_state: (B,H,P,N)).
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = chunk
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    da = -(dt * a_log[None, None, :])                     # (B, L, H) negative
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h).transpose(0, 1, 3, 2)   # (B, nc, H, Q)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    a_cum = jnp.cumsum(dac, axis=-1)                      # (B, nc, H, Q)
+    lmat = jnp.exp(_segsum(dac))                          # (B, nc, H, Q, Q)
+
+    xdt = xc * dtc[..., None]                             # dt-weighted inputs
+    # intra-chunk (diagonal) term
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", cc, bc, lmat, xdt)
+
+    # per-chunk input->state contribution
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)       # (B, nc, H, Q)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", bc, decay_states, xdt)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[..., -1])                 # (B, nc, H)
+
+    def step(carry, inputs):
+        s_new, decay = inputs                             # (B,H,P,N), (B,H)
+        out = carry                                       # state entering chunk
+        nxt = carry * decay[..., None, None] + s_new
+        return nxt, out
+
+    init = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+            else initial_state)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B, nc, H, P, N)
+
+    state_decay = jnp.exp(a_cum)                          # (B, nc, H, Q)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                return_cache: bool = False):
+    """Full Mamba-2 mixer: in_proj -> causal conv -> SSD -> gated norm -> out.
+
+    ``return_cache=True`` additionally returns the :class:`MambaCache` after
+    the last position (prefill -> decode handoff).
+    """
+    d_in, heads, n, conv_ch = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    xbc_raw = jnp.concatenate([xin, bmat, cmat], -1)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xin, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    b, l, _ = x.shape
+    xh = xin.reshape(b, l, heads, cfg.ssm_headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = jnp.exp(params["A_log"])
+    y, final_state = ssd_scan(xh.astype(jnp.float32), dt, a,
+                              bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+                              cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], eps=cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_cache:
+        return out
+    cache = MambaCache(conv=xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype),
+                       state=final_state.astype(jnp.float32))
+    return out, cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    d_in, heads, n, conv_ch = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, heads, cfg.ssm_headdim, n), jnp.float32))
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cache: MambaCache,
+                      cfg: ModelConfig) -> tuple[jax.Array, MambaCache]:
+    """Single-token recurrence. ``x: (B, 1, d)`` -> (y: (B, 1, d), new cache)."""
+    d_in, heads, n, conv_ch = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+
+    xbc_new = jnp.concatenate([xin, bmat, cmat], -1)      # (B, 1, C)
+    window = jnp.concatenate([cache.conv, xbc_new], axis=1)  # (B, conv, C)
+    conv_out = jax.nn.silu(
+        (window * params["conv_w"][None]).sum(axis=1, keepdims=True)
+        + params["conv_b"])
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    b = x.shape[0]
+    xh = xin.reshape(b, heads, cfg.ssm_headdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(params["A_log"])
+    da = jnp.exp(-dt * a)                                 # (B, H)
+    bv = bmat[:, 0].astype(jnp.float32)                   # (B, N)
+    cv = cmat[:, 0].astype(jnp.float32)
+    # h' = da·h + dt·x ⊗ B ; y = h'·C + D·x
+    upd = (dt[..., None] * xh)[..., None] * bv[:, None, None, :]
+    state = cache.state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cv)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], eps=cfg.norm_eps)
+    return y @ params["out_proj"], MambaCache(conv=window[:, 1:], state=state)

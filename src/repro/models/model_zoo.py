@@ -1,0 +1,58 @@
+"""Family dispatch: one uniform interface over all assigned architectures.
+
+    init_params(cfg, key)            -> params pytree
+    loss_fn(params, cfg, batch)      -> scalar CE (+aux)
+    forward_hidden(params, cfg, b)   -> (hidden, aux)
+    init_cache(cfg, batch, max_seq)  -> decode cache pytree
+    decode_step(params, cfg, cache, batch) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from . import ssm_lm, transformer, zamba2
+
+__all__ = ["bind"]
+
+_TRANSFORMER_FAMILIES = {"dense", "moe", "vlm", "audio"}
+
+
+class BoundModel:
+    """Config-bound model functions (plain namespace, everything functional)."""
+
+    def __init__(self, cfg: ModelConfig):
+        cfg.validate()
+        self.cfg = cfg
+        if cfg.family in _TRANSFORMER_FAMILIES:
+            self._mod = transformer
+            self._cache_init = transformer.init_kv_cache
+        elif cfg.family == "ssm":
+            self._mod = ssm_lm
+            self._cache_init = ssm_lm.init_cache
+        elif cfg.family == "hybrid":
+            self._mod = zamba2
+            self._cache_init = zamba2.init_cache
+        else:
+            raise ValueError(f"unknown family {cfg.family!r}")
+
+    def init_params(self, key):
+        return self._mod.init_params(self.cfg, key)
+
+    def loss_fn(self, params, batch):
+        return self._mod.loss_fn(params, self.cfg, batch)
+
+    def forward_hidden(self, params, batch):
+        return self._mod.forward_hidden(params, self.cfg, batch)
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        return self._cache_init(self.cfg, batch_size, max_seq)
+
+    def decode_step(self, params, cache, batch):
+        return self._mod.decode_step(params, self.cfg, cache, batch)
+
+    def prefill_step(self, params, batch, *, extra_slots: int = 0):
+        return self._mod.prefill_step(params, self.cfg, batch,
+                                      extra_slots=extra_slots)
+
+
+def bind(cfg: ModelConfig) -> BoundModel:
+    return BoundModel(cfg)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN: group-limited GShard-style top-k routing.
+
+Tokens are routed within fixed-size groups so the one-hot dispatch/combine
+tensors stay ``(G, E, C)`` with ``G = router_group_size`` — the standard trick
+that keeps GShard dispatch memory bounded and shards cleanly: groups shard
+over the data axis, experts over the model axis, and GSPMD inserts the
+all-to-all at the dispatch/combine einsums.
+
+Capacity ``C = G·top_k/E · capacity_factor``; overflow tokens drop (their
+combine weight is zero), matching GShard/Switch semantics. A load-balancing
+aux loss (Switch §2.2) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["init_moe_params", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(cfg: ModelConfig) -> int:
+    g, e = cfg.router_group_size, cfg.n_experts
+    return max(int(g * cfg.top_k / e * cfg.capacity_factor), 4)
+
+
+def init_moe_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    params = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * scale_in,
+        "w1": (jax.random.normal(k2, (e, d, f)) * scale_in).astype(dtype),
+        "w3": (jax.random.normal(k3, (e, d, f)) * scale_in).astype(dtype),
+        "w2": (jax.random.normal(k4, (e, f, d)) * scale_out).astype(dtype),
+    }
+    if cfg.shared_expert_d_ff:
+        fs = cfg.shared_expert_d_ff
+        params["shared"] = {
+            "w1": (jax.random.normal(k5, (d, fs)) * scale_in).astype(dtype),
+            "w3": (jax.random.normal(k6, (d, fs)) * scale_in).astype(dtype),
+            "w2": (jax.random.normal(k7, (fs, d)) * fs ** -0.5).astype(dtype),
+        }
+    return params
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """``x: (B, S, d)`` -> (output, aux_loss). Routing in fp32."""
+    b, s, d = x.shape
+    e, c = cfg.n_experts, moe_capacity(cfg)
+    t = b * s
+    g = min(cfg.router_group_size, t)   # decode steps have few tokens
+    assert t % g == 0, f"tokens {t} % group {g}"
+    ng = t // g
+    xg = x.reshape(ng, g, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (ng, G, E)
+
+    # --- top-k slot-by-slot dispatch with running per-expert positions
+    gates = jnp.zeros((ng, g, e), jnp.float32)
+    position = jnp.zeros((ng, g, e), jnp.int32)
+    counts = jnp.zeros((ng, 1, e), jnp.int32)
+    masked = probs
+    for _ in range(cfg.top_k):
+        idx = jnp.argmax(masked, axis=-1)                       # (ng, G)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        gate = (masked * onehot).sum(-1, keepdims=True)         # chosen prob
+        pos = counts + jnp.cumsum(onehot.astype(jnp.int32), axis=1) - onehot.astype(jnp.int32)
+        keep = (pos < c) & (onehot > 0)
+        gates = gates + jnp.where(keep, gate * onehot, 0.0)
+        position = jnp.where(keep, pos, position)
+        counts = counts + onehot.astype(jnp.int32).sum(axis=1, keepdims=True)
+        masked = masked * (1.0 - onehot)                        # remove chosen
+
+    # normalize gates over the selected experts (norm_topk_prob, qwen3-style)
+    denom = jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    gates = gates / denom
+
+    # --- combine tensor (ng, G, E, C); dispatch is its support
+    pos_onehot = jax.nn.one_hot(position, c, dtype=jnp.float32)  # (ng,G,E,C)
+    combine = gates[..., None] * pos_onehot * (gates[..., None] > 0)
+    dispatch = (combine > 0).astype(xg.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (ng,E,C,d)
+    act = _act(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w1"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w2"])           # (ng,E,C,d)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), ye)
+
+    # --- Switch load-balance aux loss: E · Σ_e f_e · P_e
+    me = probs.mean(axis=1)                                      # (ng, E)
+    top1 = jax.nn.one_hot(jnp.argmax(probs, -1), e, dtype=jnp.float32)
+    fe = top1.mean(axis=1)
+    aux = e * jnp.mean(jnp.sum(fe * me, axis=-1))
+
+    out = y.reshape(b, s, d)
+    if "shared" in params:
+        sh = params["shared"]
+        hs = act(x @ sh["w1"]) * (x @ sh["w3"])
+        out = out + hs @ sh["w2"]
+    return out, aux

@@ -1,0 +1,126 @@
+"""Pure-SSM language model (mamba2-130m): embeddings + scanned Mamba-2 layers."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import rms_norm
+from repro.parallel.context import shard_activations
+from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
+                     mamba_block, mamba_decode_step)
+
+__all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache", "decode_step"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = _dtype(cfg)
+    k_emb, k_layers = jax.random.split(key)
+
+    def init_one(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mixer": init_mamba_params(cfg, k, dtype)}
+
+    stacked = jax.vmap(init_one)(jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def body(x, layer):
+        x = shard_activations(x)
+        return x + mamba_block(layer["mixer"],
+                               rms_norm(x, layer["ln"], eps=cfg.norm_eps), cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, l: body_fn(c, l), x, params["layers"])
+    return rms_norm(x, params["final_norm"], eps=cfg.norm_eps), jnp.float32(0.0)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    hidden, _ = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    b, s = labels.shape
+    head = params["embed"].T   # tied embeddings (mamba-130m style)
+    chunk = min(cfg.loss_chunk, s)
+    nc = s // chunk
+    hidden = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lab = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inputs):
+        h, y = inputs
+        logits = (h @ head).astype(jnp.float32)
+        valid = y >= 0
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        total, count = carry
+        return (total + jnp.where(valid, -ll, 0.0).sum(), count + valid.sum(dtype=jnp.int32)), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0.0), jnp.int32(0)), (hidden, lab))
+    return total / jnp.maximum(count, 1)
+
+
+def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
+                 extra_slots: int = 0):
+    """Prompt pass -> (last-token logits, per-layer SSM states). The state is
+    O(1) in sequence length — no cache padding needed (extra_slots ignored)."""
+    del extra_slots
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def body(x, layer):
+        x = shard_activations(x)
+        y, cache = mamba_block(layer["mixer"],
+                               rms_norm(x, layer["ln"], eps=cfg.norm_eps), cfg,
+                               return_cache=True)
+        return x + y, cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = jax.lax.scan(lambda c, l: body_fn(c, l), x, params["layers"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = (x[:, -1:] @ params["embed"].T).astype(jnp.float32)
+    s = batch["tokens"].shape[1]
+    return logits, SSMCacheState(mamba=MambaCache(*caches),
+                                 pos=jnp.asarray(s, jnp.int32))
+
+
+class SSMCacheState(NamedTuple):
+    mamba: MambaCache   # leaves stacked over layers
+    pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> SSMCacheState:
+    del max_seq  # O(1) state — the whole point for long_500k
+    single = init_mamba_cache(cfg, batch, _dtype(cfg))
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy(), single)
+    return SSMCacheState(mamba=MambaCache(*stacked), pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: SSMCacheState,
+                batch: dict) -> tuple[jax.Array, SSMCacheState]:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+    def body(x, inputs):
+        layer, mc = inputs
+        y, mc2 = mamba_decode_step(layer["mixer"],
+                                   rms_norm(x, layer["ln"], eps=cfg.norm_eps),
+                                   MambaCache(*mc), cfg)
+        return x + y, mc2
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache.mamba))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, SSMCacheState(mamba=MambaCache(*new_caches), pos=cache.pos + 1)

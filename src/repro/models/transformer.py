@@ -1,0 +1,394 @@
+"""Generic decoder-only transformer covering the dense / MoE / VLM / audio
+assigned architectures (qwen2*, gemma2, smollm, musicgen, qwen3-moe, llama4,
+qwen2-vl).
+
+Depth is executed as ``lax.scan`` over *groups* of layers: a group is one
+period of the config's window/MoE pattern (1 for uniform models, 2 for
+gemma2's local/global alternation, 4 for llama4's chunked+MoE interleave).
+Parameters are stacked over groups, so HLO size is depth-independent and
+activation remat is one `jax.checkpoint` per group.
+
+SC-GEMM integration (the paper's numeric): with ``cfg.use_sc_gemm`` the MLP
+projections run through ``repro.core.sc_layers.sc_dense`` — forward through
+the stochastic multiplier GEMM, straight-through gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.sc_layers import sc_dense
+from repro.parallel.context import shard_activations
+from .layers import (apply_mrope, apply_rope, decode_attention,
+                     flash_attention, rms_norm, rope, softcap)
+from .moe import init_moe_params, moe_ffn
+
+__all__ = ["init_params", "forward_hidden", "loss_fn", "init_kv_cache",
+           "decode_step", "logits_from_hidden"]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- params
+
+def _init_attn(cfg: ModelConfig, key, dtype) -> dict:
+    """QKV/O weights kept 3D — (d, heads, head_dim) — so the head axis is an
+    explicit, GSPMD-shardable dimension (flattened h·hd would split mid-head
+    for head counts not divisible by the model-axis size)."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h, hd)) * d ** -0.5).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kv, hd)) * d ** -0.5).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kv, hd)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h, hd, d)) * (h * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_mlp(cfg: ModelConfig, key, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def _init_layer(cfg: ModelConfig, pos: int, key, dtype) -> dict:
+    ka, kf = jax.random.split(key)
+    layer = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": _init_attn(cfg, ka, dtype),
+    }
+    if cfg.post_norms:
+        layer["ln1_post"] = jnp.ones((cfg.d_model,), dtype)
+        layer["ln2_post"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.moe_at(pos):
+        layer["moe"] = init_moe_params(cfg, kf, dtype)
+    else:
+        layer["mlp"] = _init_mlp(cfg, kf, dtype)
+    return layer
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    cfg.validate()
+    dtype = _dtype(cfg)
+    gsz = cfg.group_size
+    ngroups = cfg.n_layers // gsz
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+
+    if cfg.n_codebooks:
+        embed = (jax.random.normal(k_emb, (cfg.n_codebooks, cfg.vocab_size, cfg.d_model))
+                 * cfg.d_model ** -0.5)
+        head_out = cfg.n_codebooks * cfg.vocab_size
+    else:
+        embed = jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model)) * cfg.d_model ** -0.5
+        head_out = cfg.vocab_size
+
+    params: dict[str, Any] = {
+        "embed": embed.astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, head_out))
+                             * cfg.d_model ** -0.5).astype(dtype)
+
+    def init_group(gkey):
+        return tuple(_init_layer(cfg, p, jax.random.fold_in(gkey, p), dtype)
+                     for p in range(gsz))
+
+    gkeys = jax.random.split(k_layers, ngroups)
+    stacked = jax.vmap(init_group)(gkeys)   # leaves: (ngroups, ...)
+    params["layers"] = stacked
+    return params
+
+
+# ----------------------------------------------------------------- forward
+
+def _project(x, w, b=None, *, sc=None):
+    out = sc_dense(x, w, sc) if sc is not None else x @ w
+    return out + b if b is not None else out
+
+
+def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  window: int | None, positions, mrope_positions,
+                  cache: tuple | None, cache_pos) -> tuple[jax.Array, tuple | None]:
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def proj(w, bias):
+        out = jnp.einsum("bsd,dhe->bshe", x, w)
+        return out + bias if bias is not None else out
+
+    q = proj(p["wq"], p.get("bq"))
+    k = proj(p["wk"], p.get("bk"))
+    v = proj(p["wv"], p.get("bv"))
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        cos, sin = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None or cache == "collect":
+        if cfg.attn_kv_gather:
+            # §Perf: force K/V into the gathered-once layout so the flash
+            # loops slice locally instead of re-gathering per block step
+            from jax.sharding import PartitionSpec as _P
+            from repro.parallel.context import batch_axes, constrain
+            baxes = batch_axes()
+            k = constrain(k, _P(baxes, None, None, None))
+            v = constrain(v, _P(baxes, None, None, None))
+        out = flash_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=True, window=window, logit_softcap=cfg.attn_softcap,
+            q_block=min(cfg.q_block, s), kv_block=min(cfg.kv_block, s),
+            skip_masked_blocks=cfg.skip_masked_blocks,
+            bf16_probs=cfg.bf16_probs)
+        new_cache = (k, v) if cache == "collect" else None
+    else:
+        k_cache, v_cache = cache
+        cache_pos = jnp.asarray(cache_pos, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (zero, cache_pos, zero, zero))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (zero, cache_pos, zero, zero))
+        out = decode_attention(q, k_cache, v_cache,
+                               q_position=jnp.full((b,), cache_pos, jnp.int32),
+                               window=window, logit_softcap=cfg.attn_softcap)
+        new_cache = (k_cache, v_cache)
+
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), new_cache
+
+
+def _mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    sc = cfg.sc_bits if cfg.use_sc_gemm else None
+    h = act(_project(x, p["w1"], sc=sc)) * _project(x, p["w3"], sc=sc)
+    return _project(h, p["w2"], sc=sc)
+
+
+def _layer_forward(layer: dict, x: jax.Array, cfg: ModelConfig, pos: int, *,
+                   positions, mrope_positions, cache, cache_pos):
+    window = cfg.window_at(pos)
+    attn_in = rms_norm(x, layer["ln1"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    attn_out, new_cache = _attn_forward(
+        layer["attn"], attn_in, cfg, window=window, positions=positions,
+        mrope_positions=mrope_positions, cache=cache, cache_pos=cache_pos)
+    if cfg.post_norms:
+        attn_out = rms_norm(attn_out, layer["ln1_post"], eps=cfg.norm_eps,
+                            plus_one=cfg.norm_plus_one)
+    x = x + attn_out
+
+    ff_in = rms_norm(x, layer["ln2"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    aux = jnp.float32(0.0)
+    if cfg.moe_at(pos):
+        ff_out, aux = moe_ffn(layer["moe"], ff_in, cfg)
+    else:
+        ff_out = _mlp_forward(layer["mlp"], ff_in, cfg)
+    if cfg.post_norms:
+        ff_out = rms_norm(ff_out, layer["ln2_post"], eps=cfg.norm_eps,
+                          plus_one=cfg.norm_plus_one)
+    return x + ff_out, new_cache, aux
+
+
+def _embed_tokens(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # musicgen: (B, S, K) codebook ids; frontend stub sums codebook embeds
+        parts = [jnp.take(params["embed"][i], tokens[..., i], axis=0)
+                 for i in range(cfg.n_codebooks)]
+        x = sum(parts)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if "visual_embeds" in batch and batch["visual_embeds"] is not None:
+        vis = batch["visual_embeds"].astype(x.dtype)   # (B, P, d) patch stub
+        x = jax.lax.dynamic_update_slice(x, vis, (0, 0, 0))
+    return x
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (hidden (B,S,d) after final norm, aux loss)."""
+    x = _embed_tokens(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = batch.get("positions_1d")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mrope_positions = batch.get("mrope_positions")
+
+    gsz = cfg.group_size
+
+    def group_body(x, group_params):
+        x = shard_activations(x)
+        aux_total = jnp.float32(0.0)
+        for pos in range(gsz):
+            x, _, aux = _layer_forward(group_params[pos], x, cfg, pos,
+                                       positions=positions,
+                                       mrope_positions=mrope_positions,
+                                       cache=None, cache_pos=None)
+            aux_total += aux
+        return x, aux_total
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, auxes = jax.lax.scan(lambda c, p: body(c, p), x, params["layers"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    return x, auxes.sum()
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    head = params["lm_head"] if "lm_head" in params else (
+        params["embed"].T if not cfg.n_codebooks else
+        jnp.transpose(params["embed"], (2, 0, 1)).reshape(cfg.d_model, -1))
+    logits = hidden @ head
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.n_codebooks:
+        logits = logits.reshape(*hidden.shape[:-1], cfg.n_codebooks, cfg.vocab_size)
+    return logits
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Next-token CE, computed in sequence chunks so (B, S, V) never
+    materializes (V up to 256k). Aux (MoE balance) loss folded in."""
+    hidden, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    b, s = labels.shape[:2]
+    chunk = min(cfg.loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, [(0, 0), (0, pad)] + [(0, 0)] * (labels.ndim - 2),
+                         constant_values=-1)
+    nc = (s + pad) // chunk
+    hidden = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lab = labels.reshape(b, nc, chunk, *labels.shape[2:]).transpose(1, 0, 2,
+                                                                    *range(3, labels.ndim + 1))
+
+    def chunk_loss(carry, inputs):
+        h, y = inputs
+        logits = logits_from_hidden(params, cfg, h)
+        valid = (y >= 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        total, count = carry
+        return (total + jnp.where(valid, -ll, 0.0).sum(),
+                count + valid.sum(dtype=jnp.int32)), None
+
+    (total, count), _ = jax.lax.scan(chunk_loss,
+                                     (jnp.float32(0.0), jnp.int32(0)),
+                                     (hidden, lab))
+    return total / jnp.maximum(count, 1) + 0.01 * aux
+
+
+# ----------------------------------------------------------------- prefill
+
+def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
+                 extra_slots: int = 0):
+    """Process the full prompt, returning (last-token logits, filled KVCache).
+
+    ``extra_slots`` pads the cache's sequence axis for subsequent decode.
+    """
+    x = _embed_tokens(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    gsz = cfg.group_size
+
+    def group_body(x, group_params):
+        x = shard_activations(x)
+        ks, vs = [], []
+        for pos in range(gsz):
+            x, kvc, _ = _layer_forward(group_params[pos], x, cfg, pos,
+                                       positions=positions,
+                                       mrope_positions=mrope_positions,
+                                       cache="collect", cache_pos=None)
+            ks.append(kvc[0])
+            vs.append(kvc[1])
+        return x, (tuple(ks), tuple(vs))
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, (ks, vs) = jax.lax.scan(lambda c, p: body(c, p), x, params["layers"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])
+
+    if extra_slots:
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, extra_slots),
+                                    (0, 0), (0, 0)))
+        ks = tuple(pad(k) for k in ks)
+        vs = tuple(pad(v) for v in vs)
+    cache = KVCache(k=ks, v=vs, pos=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+# ------------------------------------------------------------------ decode
+
+class KVCache(NamedTuple):
+    k: Any   # tuple over group positions of (ngroups, B, S, KV, hd)
+    v: Any
+    pos: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
+    dtype = _dtype(cfg)
+    ngroups = cfg.n_layers // cfg.group_size
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (ngroups, batch, max_seq, kv, hd)
+    k = tuple(jnp.zeros(shape, dtype) for _ in range(cfg.group_size))
+    v = tuple(jnp.zeros(shape, dtype) for _ in range(cfg.group_size))
+    return KVCache(k=k, v=v, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
+                batch: dict) -> tuple[jax.Array, KVCache]:
+    """One token for every sequence in the batch. ``batch["tokens"]: (B, 1)``
+    (or (B, 1, K) for codebooks). Returns (logits, updated cache)."""
+    x = _embed_tokens(params, cfg, batch)
+    b = x.shape[0]
+    pos = cache.pos
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.mrope_sections is not None and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+
+    gsz = cfg.group_size
+
+    def group_body(x, inputs):
+        group_params = inputs["params"]
+        new_k, new_v = [], []
+        for p in range(gsz):
+            x, kvc, _ = _layer_forward(
+                group_params[p], x, cfg, p,
+                positions=positions, mrope_positions=mrope_positions,
+                cache=(inputs["k"][p], inputs["v"][p]), cache_pos=pos)
+            new_k.append(kvc[0])
+            new_v.append(kvc[1])
+        return x, (tuple(new_k), tuple(new_v))
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x,
+        {"params": params["layers"], "k": cache.k, "v": cache.v})
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, KVCache(k=ks, v=vs, pos=pos + 1)

@@ -1,0 +1,224 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with a *shared* transformer block
+(attention + MLP, one parameter set) invoked after every k-th mamba layer —
+arXiv:2411.15242. Parameter sharing means the attention weights are reused at
+~n_layers/k call sites while each site keeps its own KV cache.
+
+Simplifications vs the HF checkpoint (noted in DESIGN.md): the shared block
+consumes the hidden state directly (no concat with the original embedding, no
+per-invocation LoRA deltas).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import rms_norm
+from repro.parallel.context import shard_activations
+from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
+                     mamba_block, mamba_decode_step)
+from .transformer import _attn_forward, _init_attn, _init_mlp, _mlp_forward
+
+__all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache",
+           "decode_step", "HybridCache", "n_attn_sites"]
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    cfg.validate()
+    dtype = _dtype(cfg)
+    k_emb, k_mamba, k_attn, k_mlp, k_head = jax.random.split(key, 5)
+
+    def init_one(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mixer": init_mamba_params(cfg, k, dtype)}
+
+    stacked = jax.vmap(init_one)(jax.random.split(k_mamba, cfg.n_layers))
+    return {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "layers": stacked,
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": _init_attn(cfg, k_attn, dtype),
+            "mlp": _init_mlp(cfg, k_mlp, dtype),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size))
+                    * cfg.d_model ** -0.5).astype(dtype),
+    }
+
+
+def _shared_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                  positions, cache, cache_pos):
+    attn_in = rms_norm(x, params["ln1"], eps=cfg.norm_eps)
+    attn_out, new_cache = _attn_forward(
+        params["attn"], attn_in, cfg, window=None, positions=positions,
+        mrope_positions=None, cache=cache, cache_pos=cache_pos)
+    x = x + attn_out
+    ff_in = rms_norm(x, params["ln2"], eps=cfg.norm_eps)
+    x = x + _mlp_forward(params["mlp"], ff_in, cfg)
+    return x, new_cache
+
+
+def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+
+    # regroup the stacked mamba layers: (n_layers, ...) -> (n_groups, every, ...)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+
+    def group_body(x, group):
+        x = shard_activations(x)
+        for i in range(every):
+            layer = jax.tree.map(lambda a: a[i], group)
+            x = x + mamba_block(layer["mixer"],
+                                rms_norm(x, layer["ln"], eps=cfg.norm_eps), cfg)
+        x, _ = _shared_block(params["shared"], x, cfg,
+                             positions=positions, cache=None, cache_pos=None)
+        return x, jnp.float32(0.0)
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(lambda c, g: body(c, g), x, grouped)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    return x, jnp.float32(0.0)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    from .transformer import loss_fn as _tl
+
+    # reuse the chunked-CE plumbing by faking the transformer interface
+    hidden, _ = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    b, s = labels.shape
+    chunk = min(cfg.loss_chunk, s)
+    nc = s // chunk
+    hidden = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lab = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inputs):
+        h, y = inputs
+        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        valid = y >= 0
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        total, count = carry
+        return (total + jnp.where(valid, -ll, 0.0).sum(), count + valid.sum(dtype=jnp.int32)), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0.0), jnp.int32(0)), (hidden, lab))
+    return total / jnp.maximum(count, 1)
+
+
+def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
+                 extra_slots: int = 0):
+    """Prompt pass -> (last-token logits, HybridCache with SSM states filled
+    and per-site KV caches collected)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+
+    def group_body(x, group):
+        x = shard_activations(x)
+        mcaches = []
+        for i in range(every):
+            layer = jax.tree.map(lambda a: a[i], group)
+            y, mc = mamba_block(layer["mixer"],
+                                rms_norm(x, layer["ln"], eps=cfg.norm_eps), cfg,
+                                return_cache=True)
+            x = x + y
+            mcaches.append(mc)
+        x, kvc = _shared_block(params["shared"], x, cfg,
+                               positions=positions, cache="collect",
+                               cache_pos=None)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *mcaches)
+        return x, (stacked, kvc[0], kvc[1])
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, (mcaches, ks, vs) = jax.lax.scan(lambda c, g: body(c, g), x, grouped)
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+    mcaches = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mcaches)
+    if extra_slots:
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, extra_slots),
+                                    (0, 0), (0, 0)))
+        ks, vs = pad(ks), pad(vs)
+    cache = HybridCache(mamba=MambaCache(*mcaches), k=ks, v=vs,
+                        pos=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+class HybridCache(NamedTuple):
+    mamba: Any            # MambaCache with leaves stacked over n_layers
+    k: jax.Array          # (sites, B, S, KV, hd)
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> HybridCache:
+    dtype = _dtype(cfg)
+    sites = n_attn_sites(cfg)
+    single = init_mamba_cache(cfg, batch, dtype)
+    mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy(), single)
+    shape = (sites, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return HybridCache(mamba=mamba, k=jnp.zeros(shape, dtype),
+                       v=jnp.zeros(shape, dtype), pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
+                batch: dict) -> tuple[jax.Array, HybridCache]:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)   # (B, 1, d)
+    pos = cache.pos
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+
+    grouped_params = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+    grouped_mamba = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), cache.mamba)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+
+    def group_body(x, inputs):
+        group, mcaches, kc, vc = inputs
+        new_m = []
+        for i in range(every):
+            layer = jax.tree.map(lambda a: a[i], group)
+            mc = jax.tree.map(lambda a: a[i], mcaches)
+            y, mc2 = mamba_decode_step(layer["mixer"],
+                                       rms_norm(x, layer["ln"], eps=cfg.norm_eps),
+                                       MambaCache(*mc), cfg)
+            x = x + y
+            new_m.append(mc2)
+        x, (kc2, vc2) = _shared_block(params["shared"], x, cfg,
+                                      positions=positions,
+                                      cache=(kc, vc), cache_pos=pos)
+        stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+        return x, (stacked_m, kc2, vc2)
+
+    x, (new_mamba, ks, vs) = jax.lax.scan(
+        group_body, x, (grouped_params, grouped_mamba, cache.k, cache.v))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_mamba = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mamba)
+    return logits, HybridCache(mamba=MambaCache(*new_mamba), k=ks, v=vs, pos=pos + 1)

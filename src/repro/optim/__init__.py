@@ -1,0 +1,3 @@
+"""Optimizers: AdamW (+8-bit moments), LR schedules, gradient compression."""
+from .adamw import AdamWConfig, apply_updates, init
+from .schedules import constant, warmup_cosine

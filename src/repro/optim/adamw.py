@@ -1,0 +1,101 @@
+"""Functional AdamW with optional 8-bit block-quantized moments.
+
+At the 235B/400B MoE scale, fp32 Adam moments alone are 8 bytes/param —
+quantizing both moments to int8 with per-block fp32 scales (block = 256, the
+8-bit-Adam recipe) cuts optimizer state to ~2.03 bytes/param, which is what
+lets the 400B config fit a 256-chip v5e pod (DESIGN.md §3). Quantization is
+applied on the *stored* state; the update math runs in fp32 after dequant.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init", "apply_updates", "Quantized8", "quantize8",
+           "dequantize8"]
+
+_BLOCK = 256
+
+
+class Quantized8(NamedTuple):
+    """int8 payload + per-block fp32 scales (+ static original shape/pad)."""
+    q: jax.Array
+    scale: jax.Array
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantize_moments: bool = False
+
+
+def quantize8(x: jax.Array) -> Quantized8:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Quantized8(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize8(z: Quantized8, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (z.q.astype(jnp.float32) * z.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def _zeros_moment(p: jax.Array, quantize: bool):
+    if quantize:
+        return quantize8(jnp.zeros_like(p, jnp.float32))
+    return jnp.zeros_like(p, jnp.float32)
+
+
+def init(params: Any, cfg: AdamWConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: _zeros_moment(p, cfg.quantize_moments), params),
+        "v": jax.tree.map(lambda p: _zeros_moment(p, cfg.quantize_moments), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                  lr: jax.Array) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_f = dequantize8(m, p.shape) if cfg.quantize_moments else m
+        v_f = dequantize8(v, p.shape) if cfg.quantize_moments else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        update = (m_f / c1) / (jnp.sqrt(v_f / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        if cfg.quantize_moments:
+            return p_new, quantize8(m_f), quantize8(v_f)
+        return p_new, m_f, v_f
+
+    is_q = lambda x: isinstance(x, Quantized8)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

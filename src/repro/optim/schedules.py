@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / max(warmup_steps, 1)
+    progress = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, peak_lr: float):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak_lr)

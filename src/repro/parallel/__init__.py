@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding rules + pipeline-parallel utility."""
+from .sharding import batch_pspecs, cache_pspecs, named, param_pspecs

@@ -1,0 +1,57 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; launchers install a residual-stream
+PartitionSpec here and the model applies it at layer-group boundaries (after
+embedding, at each scan step, before the final norm). The default layout is
+*sequence parallelism* (Korthikanti et al.): tokens shard over the ``model``
+axis between blocks, so the per-layer remat carry is 1/|model| the size and
+GSPMD inserts the all-gather (block entry) / reduce-scatter (block exit) pair.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import PartitionSpec
+
+_ACTIVATION_SPEC: ContextVar[PartitionSpec | None] = ContextVar(
+    "activation_spec", default=None)
+
+__all__ = ["activation_sharding_scope", "shard_activations"]
+
+
+@contextlib.contextmanager
+def activation_sharding_scope(spec: PartitionSpec | None):
+    token = _ACTIVATION_SPEC.set(spec)
+    try:
+        yield
+    finally:
+        _ACTIVATION_SPEC.reset(token)
+
+
+def shard_activations(x: jax.Array) -> jax.Array:
+    """Constrain a (B, S, d) residual-stream tensor, if a scope is active."""
+    spec = _ACTIVATION_SPEC.get()
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain(x: jax.Array, spec: PartitionSpec) -> jax.Array:
+    """Constrain an arbitrary tensor using the active scope's mesh (no-op
+    outside a scope). Used by §Perf layout experiments (e.g. attn_kv_gather)."""
+    active = _ACTIVATION_SPEC.get()
+    if active is None or not hasattr(active, "mesh"):
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(active.mesh, spec))
+
+
+def batch_axes():
+    """The batch axis names of the active residual spec (or None)."""
+    active = _ACTIVATION_SPEC.get()
+    if active is None:
+        return None
+    spec = active.spec if hasattr(active, "spec") else active
+    return spec[0] if len(spec) else None

@@ -1,0 +1,4 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic re-mesh, supervisor."""
+from .fault_tolerance import (HeartbeatMonitor, StragglerDetector,
+                              SupervisorConfig, TrainingSupervisor,
+                              plan_elastic_mesh)

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the 512-device override lives ONLY
+# in launch/dryrun.py, per the dry-run contract). x64 is enabled so exhaustive
+# error sweeps accumulate exactly.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,38 @@
+"""The analytical hardware model must reproduce the paper's Table II."""
+import pytest
+
+from repro.core.hardware_model import (PAPER_TABLE2, improvement_factors,
+                                       report, table2)
+
+
+@pytest.mark.parametrize("name", ["proposed", "gaines", "jenson", "umul"])
+def test_area_matches_table2(name):
+    assert report(name).area_um2 == pytest.approx(PAPER_TABLE2[name]["area_um2"], rel=0.01)
+
+
+@pytest.mark.parametrize("name", ["proposed", "gaines", "jenson", "umul"])
+def test_latency_matches_table2(name):
+    assert report(name).latency_ns == pytest.approx(PAPER_TABLE2[name]["latency_ns"], rel=0.01)
+
+
+@pytest.mark.parametrize("name", ["proposed", "gaines", "jenson", "umul"])
+def test_energy_latency_product_matches_table2(name):
+    assert report(name).exl_pj_s == pytest.approx(PAPER_TABLE2[name]["exl_pj_s"], rel=0.02)
+
+
+def test_headline_ael_improvement():
+    """Paper abstract: area-energy-latency product improves by up to 10.6e4
+    vs the best prior work (uMUL). Model reproduces ~1.04e5."""
+    f = improvement_factors()
+    assert f["umul"] == pytest.approx(10.6e4, rel=0.05)
+    # and the proposed design beats every baseline
+    assert all(v > 1 for v in f.values())
+
+
+def test_latency_structure():
+    """Latency relations implied by the designs: combinational << bit-serial
+    << N^2-serial."""
+    t = table2()
+    assert t["proposed"].latency_ns < 1
+    assert t["umul"].latency_ns == t["gaines"].latency_ns == 640.0
+    assert t["jenson"].latency_ns == 640.0 * 256

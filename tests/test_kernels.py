@@ -1,0 +1,143 @@
+"""Per-kernel allclose tests vs the ref.py oracles: shape/dtype sweeps in
+interpret mode (bit-identical Mosaic semantics executed on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.sc_matmul import sc_matmul_counts_pallas
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------------- SC-GEMM kernel
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 512, 128),          # exactly one block
+    (256, 1024, 128),         # multi-block M and K
+    (128, 512, 256),          # multi-block N
+    (100, 300, 50),           # ragged -> exercises padding
+    (1, 1, 1),                # degenerate
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sc_matmul_kernel_matches_oracle(m, k, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + k + n))
+    a = _rand(k1, (m, k), dtype)
+    b = _rand(k2, (k, n), dtype)
+    out = ops.sc_matmul_pallas(a, b, bits=8, interpret=True)
+    expected = ref.sc_matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32), bits=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_sc_matmul_kernel_bits_sweep(bits):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(bits))
+    a = _rand(k1, (64, 256))
+    b = _rand(k2, (256, 64))
+    out = ops.sc_matmul_pallas(a, b, bits=bits, interpret=True)
+    expected = ref.sc_matmul_ref(a, b, bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sc_matmul_counts_exact_integers():
+    """The kernel's fp32 accumulator must hold exact integer counts."""
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    mx = jax.random.randint(k1, (128, 512), 0, 256, dtype=jnp.int32)
+    my = jax.random.randint(k2, (512, 128), 0, 256, dtype=jnp.int32)
+    sx = jax.random.choice(k3, jnp.array([-1, 1], jnp.int32), (128, 512))
+    sy = jax.random.choice(k4, jnp.array([-1, 1], jnp.int32), (512, 128))
+    out = sc_matmul_counts_pallas(sx, mx, sy, my, bits=8, interpret=True)
+    expected = ref.sc_matmul_counts_ref(sx, mx, sy, my, bits=8)
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64),
+                                  np.asarray(expected).astype(np.int64))
+    assert np.all(np.asarray(out) == np.round(np.asarray(out)))
+
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(1, 40))
+@settings(max_examples=10, deadline=None)
+def test_sc_matmul_kernel_property_shapes(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 10007 + k * 101 + n))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n))
+    out = ops.sc_matmul_pallas(a, b, bits=8, interpret=True, bm=128, bn=128, bk=512)
+    expected = ref.sc_matmul_ref(a, b, bits=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------- bit-parallel stream kernel
+
+@pytest.mark.parametrize("bits", [5, 6, 8])
+def test_stream_kernel_exhaustive_grid(bits):
+    n = 1 << bits
+    step = max(n // 64, 1)
+    x, y = jnp.meshgrid(jnp.arange(0, n, step), jnp.arange(0, n, step), indexing="ij")
+    x, y = x.reshape(-1).astype(jnp.int32), y.reshape(-1).astype(jnp.int32)
+    out = ops.sc_stream_mul(x, y, bits=bits, interpret=True)
+    expected = ref.sc_stream_mul_ref(x, y, bits=bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+def test_stream_kernel_full_exhaustive_8bit():
+    """All 65536 operand pairs at B = 8 — the kernel IS the paper's datapath."""
+    x, y = jnp.meshgrid(jnp.arange(256), jnp.arange(256), indexing="ij")
+    x, y = x.reshape(-1).astype(jnp.int32), y.reshape(-1).astype(jnp.int32)
+    out = ops.sc_stream_mul(x, y, bits=8, interpret=True)
+    expected = ref.sc_stream_mul_ref(x, y, bits=8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+
+def test_stream_kernel_matches_closed_form():
+    from repro.core import proposed_closed_form
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (1024,), 0, 256, dtype=jnp.int32)
+    y = jax.random.randint(jax.random.fold_in(key, 1), (1024,), 0, 256, dtype=jnp.int32)
+    out = ops.sc_stream_mul(x, y, bits=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(proposed_closed_form(x, y, bits=8)))
+
+
+# ------------------------------------------------- Pallas flash attention
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+@pytest.mark.parametrize("b,h,kv,sq,skv,d,bq,bk", [
+    (1, 2, 2, 256, 256, 128, 128, 128),    # MHA square
+    (2, 4, 2, 256, 512, 128, 128, 256),    # GQA, longer kv
+    (1, 8, 1, 512, 512, 128, 256, 512),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_pallas_matches_ref(b, h, kv, sq, skv, d, bq, bk, causal):
+    key = jax.random.PRNGKey(b * 100 + h)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(kk, (b, kv, skv, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, kv, skv, d), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                 interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_pallas_bf16():
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, 256, 128), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(kk, (1, 2, 256, 128), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(kv_, (1, 2, 256, 128), jnp.float32).astype(jnp.bfloat16)
+    out = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True)
+    expected = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,141 @@
+"""Launch-layer tests: HLO collective/FLOP parser units, modelmeta counts,
+sharding-rule fitting, and a subprocess integration test of the dry-run
+contract (512 fake devices, production mesh, lower+compile one cell)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCHS
+from repro.launch.hlo_analysis import (Roofline, parse_collective_bytes,
+                                       _shape_bytes)
+from repro.launch.modelmeta import model_flops, param_counts
+from repro.configs.shapes import SHAPES, is_applicable
+
+REPO = Path(__file__).resolve().parent.parent
+
+_SYNTH_HLO = """\
+HloModule test
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %limit = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %limit), direction=LT
+}
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,8] get-tuple-element(%arg), index=1
+  %ag = f32[8,16]{1,0} all-gather(%x), dimensions={1}
+  %w = f32[16,8]{1,0} parameter(1)
+  %d = f32[8,8]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %d)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %p0)
+  %loop = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  %ar = f32[8,8]{1,0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[8,8] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_parser_loop_multiplication():
+    st = parse_collective_bytes(_SYNTH_HLO)
+    # all-gather 8x16 f32 = 512B x 7 trips; all-reduce 8x8 f32 = 256B once
+    assert st.by_kind["all-gather"] == 512 * 7
+    assert st.by_kind["all-reduce"] == 256
+    # dot: 2 * 8*8 * K(16) = 2048 flops x 7 trips
+    assert st.flops == 2048 * 7
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,8]{1,0}") == 256
+    assert _shape_bytes("bf16[2,4]") == 16
+    assert _shape_bytes("(f32[4], s8[8])") == 24
+    assert _shape_bytes("pred[]") == 1  # scalar = one element
+
+
+def test_roofline_terms_math():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, collective_bytes=0.0,
+                 n_chips=256, model_flops=197e12 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory")
+    assert r.useful_flops_fraction == pytest.approx(1.0)
+    assert r.roofline_fraction == pytest.approx(1.0)
+
+
+def test_param_counts_match_public_sizes():
+    """Sanity: derived totals are near the models' advertised sizes."""
+    expectations = {
+        "smollm-360m": (0.30e9, 0.45e9),
+        "qwen2-7b": (6.5e9, 8.5e9),
+        "gemma2-9b": (8.0e9, 10.5e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "qwen3-moe-235b-a22b": (220e9, 250e9),
+        "llama4-maverick-400b-a17b": (330e9, 440e9),
+        "mamba2-130m": (0.10e9, 0.18e9),
+    }
+    for arch, (lo, hi) in expectations.items():
+        total = param_counts(ARCHS[arch])["total"]
+        assert lo < total < hi, f"{arch}: {total / 1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    c = param_counts(ARCHS["qwen3-moe-235b-a22b"])
+    # a22b: ~22B active of ~235B total
+    assert 15e9 < c["active"] < 30e9
+
+
+def test_model_flops_conventions():
+    cfg = ARCHS["smollm-360m"]
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    dc = model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(3 * pf * (256 * 4096) / (32 * 32768), rel=1e-6)
+    assert dc < pf < tr
+
+
+def test_long500k_applicability():
+    runnable = {a for a in ARCHS
+                if is_applicable(ARCHS[a], SHAPES["long_500k"])[0]}
+    assert runnable == {"mamba2-130m", "zamba2-7b"}
+
+
+def test_fit_spec_divisibility():
+    from repro.parallel.sharding import fit_spec
+    import numpy as np
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # axis size 1 always divides
+    assert fit_spec(P("data", "model"), (5, 7), mesh) == P("data", "model")
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess(tmp_path):
+    """The dry-run contract end to end: 512 host devices, production mesh,
+    lower+compile, memory/cost analysis recorded. Uses the fastest cell."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+         "--shape", "long_500k", "--mesh", "single", "--out", str(tmp_path)],
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, cwd=str(REPO), timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads((tmp_path / "mamba2-130m__long_500k__single.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["flops"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] > 0

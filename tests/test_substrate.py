@@ -1,0 +1,201 @@
+"""Substrate tests: optimizer (+8-bit moments), schedules, grad compression,
+data pipeline determinism, checkpoint round-trip, fault-tolerance policies,
+and pipeline parallelism vs the unpipelined oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import PipelineConfig, TokenPipeline
+from repro.optim import AdamWConfig, apply_updates, init, warmup_cosine
+from repro.optim.adamw import dequantize8, quantize8
+from repro.optim.grad_compression import (compress_with_feedback,
+                                          init_error_state)
+from repro.runtime import (HeartbeatMonitor, StragglerDetector,
+                           SupervisorConfig, TrainingSupervisor,
+                           plan_elastic_mesh)
+
+
+# ------------------------------------------------------------------ optimizer
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (8, 16), jnp.float32),
+            "b": jax.random.normal(k2, (16,), jnp.float32)}
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = _toy_params(jax.random.PRNGKey(0))
+    target = _toy_params(jax.random.PRNGKey(1))
+    cfg = AdamWConfig(weight_decay=0.0)
+    state = init(params, cfg)
+
+    def loss(p):
+        return sum(jnp.sum((p[k] - target[k]) ** 2) for k in p)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = apply_updates(params, g, state, cfg, lr=jnp.float32(0.05))
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adamw_quantized_moments_track_fp32():
+    params = _toy_params(jax.random.PRNGKey(0))
+    cfgq = AdamWConfig(quantize_moments=True, weight_decay=0.0)
+    cfgf = AdamWConfig(quantize_moments=False, weight_decay=0.0)
+    sq, sf = init(params, cfgq), init(params, cfgf)
+    pq, pf = params, params
+    for i in range(10):
+        g = jax.tree.map(lambda p: jnp.cos(p + i), params)
+        pq, sq = apply_updates(pq, g, sq, cfgq, lr=jnp.float32(0.01))
+        pf, sf = apply_updates(pf, g, sf, cfgf, lr=jnp.float32(0.01))
+    for k in params:
+        np.testing.assert_allclose(np.asarray(pq[k]), np.asarray(pf[k]),
+                                   rtol=0.05, atol=0.01)
+
+
+@given(st.integers(1, 4096))
+@settings(max_examples=30, deadline=None)
+def test_quantize8_roundtrip_bounded(n):
+    x = jnp.sin(jnp.arange(n, dtype=jnp.float32) * 0.37) * 3.0
+    z = quantize8(x)
+    back = dequantize8(z, x.shape)
+    blockmax = float(jnp.abs(x).max())
+    assert float(jnp.abs(back - x).max()) <= blockmax / 127 + 1e-6
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1e-3, warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert lrs[-1] < lrs[50] < lrs[10] + 1e-9
+
+
+def test_grad_compression_error_feedback_unbiased():
+    g = {"w": jnp.linspace(-1, 1, 1024).reshape(4, 256)}
+    err = init_error_state(g)
+    total_true = jnp.zeros_like(g["w"])
+    total_sent = jnp.zeros_like(g["w"])
+    for i in range(50):
+        gi = {"w": g["w"] * (1 + 0.1 * jnp.sin(i * 1.0))}
+        sent, err = compress_with_feedback(gi, err)
+        total_true += gi["w"]
+        total_sent += sent["w"]
+    # error feedback keeps the *accumulated* signal unbiased
+    denom = float(jnp.abs(total_true).mean())
+    assert float(jnp.abs(total_sent - total_true).mean()) < 0.02 * denom
+
+
+# ----------------------------------------------------------------------- data
+
+def test_pipeline_deterministic_and_sharded():
+    base = dict(vocab_size=1000, seq_len=64, global_batch=8, shard_count=2)
+    p0 = TokenPipeline(PipelineConfig(shard_index=0, **base))
+    p0b = TokenPipeline(PipelineConfig(shard_index=0, **base))
+    p1 = TokenPipeline(PipelineConfig(shard_index=1, **base))
+    b0, b0b, b1 = p0.get_batch(3), p0b.get_batch(3), p1.get_batch(3)
+    np.testing.assert_array_equal(b0["tokens"], b0b["tokens"])     # deterministic
+    assert not np.array_equal(b0["tokens"], b1["tokens"])          # sharded
+    assert b0["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+    assert b0["tokens"].max() < 1000
+
+
+def test_pipeline_file_backed(tmp_path):
+    from repro.data.pipeline import write_corpus
+    corpus = np.arange(10000, dtype=np.int32) % 50
+    path = tmp_path / "corpus.bin"
+    write_corpus(path, corpus)
+    cfg = PipelineConfig(vocab_size=50, seq_len=16, global_batch=4,
+                         corpus_path=str(path))
+    batch = TokenPipeline(cfg).get_batch(0)
+    assert batch["tokens"].shape == (4, 16)
+    assert batch["tokens"].max() < 50
+
+
+# ----------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "nested": {"b": jnp.float32(3.5)},
+            "step": jnp.int32(7)}
+    for step in (1, 2, 3):
+        ck.save(step, tree, blocking=True)
+    assert ck.all_steps() == [2, 3]              # gc kept last 2
+    restored = ck.restore(3, like=tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    assert restored["a"].dtype == jnp.bfloat16
+    assert float(restored["nested"]["b"]) == 3.5
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    tree = {"w": jnp.ones((128, 128))}
+    ck.save(10, tree, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 10
+
+
+# ------------------------------------------------------------ fault tolerance
+
+def test_heartbeat_detects_dead_worker():
+    t = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=10, clock=lambda: t[0])
+    t[0] = 5.0
+    for w in (0, 1, 3):
+        mon.beat(w)
+    t[0] = 12.0
+    assert mon.dead_workers() == [2]
+    assert mon.alive_count() == 3
+
+
+def test_straggler_detection():
+    det = StragglerDetector(min_samples=8)
+    for _ in range(10):
+        for w in range(7):
+            det.record(w, 1.0 + 0.01 * w)
+        det.record(7, 3.0)                        # 3x slower
+    assert det.stragglers() == [7]
+
+
+def test_elastic_mesh_plan():
+    assert plan_elastic_mesh(512 - 16, model_parallelism=16) == (31, 16)
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(8, model_parallelism=16)
+
+
+def test_supervisor_restart_plan():
+    sup = TrainingSupervisor(SupervisorConfig(checkpoint_every=100),
+                             n_chips=512, model_parallelism=16)
+    sup.on_step(200)
+    plan = sup.on_failure(dead_workers=[3], chips_per_worker=8)
+    assert plan["restore_step"] == 200
+    assert plan["new_mesh"] == (31, 16)
+    assert plan["surviving_chips"] == 504
+
+
+# ------------------------------------------------------------------- pipeline
+
+def test_pipeline_parallel_matches_sequential():
+    import os
+    if jax.device_count() < 4:
+        pytest.skip("needs >= 4 devices (run in dry-run env)")
+
+
+def test_pipeline_parallel_logic_single_device():
+    """Schedule correctness on a 1-stage 'pipeline' (degenerate but exercises
+    the scan/injection logic end-to-end)."""
+    from jax.sharding import Mesh
+    from repro.parallel.pipeline_parallel import pipeline_forward
+    mesh = Mesh(np.array(jax.devices()[:1]), ("stage",))
+    w = jnp.ones((1, 4, 4), jnp.float32) * 0.5
+    x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+    out = pipeline_forward(lambda p, xx: xx @ p, w, x, mesh=mesh,
+                           axis="stage", n_microbatches=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w[0]), rtol=1e-6)
