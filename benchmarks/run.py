@@ -3,31 +3,77 @@
 distribution), SC-GEMM microbenchmarks, and the dry-run roofline report.
 
     PYTHONPATH=src python -m benchmarks.run [--only table2,fig1b,sc_gemm,roofline]
+                                            [--smoke] [--json PATH]
+
+Every run that includes the ``sc_gemm`` suite appends a timestamped record to
+the ``BENCH_sc_gemm.json`` trajectory (repo root by default, ``--json`` to
+relocate), so per-impl timings accumulate across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TRAJECTORY = REPO_ROOT / "BENCH_sc_gemm.json"
+
+
+def append_trajectory(path: Path, rows: list[dict], *, smoke: bool) -> None:
+    """Append one run record to the JSON trajectory file."""
+    import jax
+    doc = {"runs": []}
+    try:
+        loaded = json.loads(path.read_text())
+        if isinstance(loaded, dict) and isinstance(loaded.get("runs"), list):
+            doc = loaded
+    except (OSError, ValueError):
+        pass
+    doc["runs"].append({
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    })
+    path.write_text(json.dumps(doc, indent=1) + "\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks to run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / capped tuning sweeps (CI)")
+    ap.add_argument("--json", type=Path, default=DEFAULT_TRAJECTORY,
+                    help="sc_gemm trajectory file (default: repo root)")
     args = ap.parse_args()
 
     from . import fig1b, roofline, sc_gemm, table2
     suites = {"table2": table2.run, "fig1b": fig1b.run,
-              "sc_gemm": sc_gemm.run, "roofline": roofline.run}
+              "sc_gemm": lambda: sc_gemm.run(smoke=args.smoke),
+              "roofline": roofline.run}
     selected = (args.only.split(",") if args.only else list(suites))
 
     print("name,us_per_call,derived")
     failures = 0
     for key in selected:
         try:
-            for row in suites[key]():
+            rows = suites[key]()
+            for row in rows:
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']},{derived}")
+            if key == "sc_gemm":
+                try:
+                    append_trajectory(args.json, rows, smoke=args.smoke)
+                    print(f"sc_gemm/trajectory,0,appended to {args.json.name}",
+                          file=sys.stderr)
+                except OSError as e:
+                    # The history append is optional; a read-only checkout
+                    # must not fail a benchmark run that already succeeded.
+                    print(f"sc_gemm/trajectory,0,NOT appended "
+                          f"({type(e).__name__}: {e})", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)

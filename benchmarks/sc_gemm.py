@@ -1,6 +1,12 @@
 """SC-GEMM throughput + accuracy microbenchmarks: the paper's multiplier as a
 GEMM numeric (the "GEMM circuits used in deep learning accelerators"
-motivation), reference vs MXU-split vs Pallas-interpret implementations."""
+motivation), comparing the reference, MXU-split, Pallas, and autotuned-Pallas
+implementations across a shape grid.
+
+``run()`` returns CSV-able rows (consumed by ``benchmarks/run.py``, which
+also appends them to the ``BENCH_sc_gemm.json`` trajectory). ``smoke=True``
+shrinks the grid and the tuning sweep for CI.
+"""
 from __future__ import annotations
 
 import time
@@ -9,45 +15,80 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["run"]
+__all__ = ["run", "SHAPES_FULL", "SHAPES_SMOKE"]
+
+#: (M, K, N) grid; the ragged shape exercises the kernel's padding path.
+SHAPES_FULL = [(128, 512, 128), (256, 1024, 256), (100, 300, 50),
+               (512, 512, 512)]
+SHAPES_SMOKE = [(32, 64, 32), (48, 96, 16), (64, 128, 64), (100, 300, 50)]
+
+#: Cap on per-shape tuning candidates in the bench (logged in the row).
+TUNE_CANDIDATE_CAP = 8
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))        # compile
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[dict]:
-    from repro.core import sc_matmul_mxu_split, sc_matmul_reference
+def run(smoke: bool = False) -> list[dict]:
+    from repro.core import (recover_counts, sc_matmul_mxu_split,
+                            sc_matmul_reference)
+    from repro.kernels import ops
+    from repro.kernels.autotune import autotune, candidate_configs
+
+    shapes = SHAPES_SMOKE if smoke else SHAPES_FULL
+    iters = 2 if smoke else 3
     rows = []
     key = jax.random.PRNGKey(0)
-    for m, k, n in [(128, 512, 128), (256, 1024, 256)]:
+    for m, k, n in shapes:
         a = jax.random.normal(key, (m, k), jnp.float32)
         b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), jnp.float32)
         exact = a @ b
 
-        for label, fn in [("reference", sc_matmul_reference),
-                          ("mxu_split", sc_matmul_mxu_split)]:
-            us = _time(lambda x, y: fn(x, y, bits=8), a, b)
-            out = fn(a, b, bits=8)
+        # Sweep fresh every run (no persistent cache): the bench must never
+        # pollute the production autotune cache with capped/smoke winners,
+        # and "swept=N" in the row is then always what actually ran.
+        cands = candidate_configs(m, k, n)[:TUNE_CANDIDATE_CAP]
+        cfg, _ = autotune(a, b, bits=8, candidates=cands, iters=iters)
+
+        impls = [
+            ("reference", lambda x, y: sc_matmul_reference(x, y, bits=8)),
+            ("mxu_split", lambda x, y: sc_matmul_mxu_split(x, y, bits=8)),
+            ("pallas", lambda x, y: ops.sc_matmul_pallas(x, y, bits=8)),
+            ("pallas_tuned",
+             lambda x, y: ops.sc_matmul_pallas(x, y, bits=8, bm=cfg.bm,
+                                               bn=cfg.bn, bk=cfg.bk,
+                                               chunk=cfg.chunk)),
+        ]
+        outs = {}
+        for label, fn in impls:
+            us = _time(fn, a, b, iters=iters)
+            out = fn(a, b)
+            outs[label] = out
             rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
             cos = float(jnp.vdot(out, exact) /
                         (jnp.linalg.norm(out) * jnp.linalg.norm(exact)))
+            extra = ""
+            if label == "pallas_tuned":
+                extra = (f" cfg=({cfg.bm};{cfg.bn};{cfg.bk};{cfg.chunk})"
+                         f" swept={len(cands)}")
             rows.append({
                 "name": f"sc_gemm/{label}/{m}x{k}x{n}",
                 "us_per_call": round(us, 1),
-                "derived": f"rel_err={rel:.3f} cosine={cos:.4f}",
+                "derived": f"rel_err={rel:.3f} cosine={cos:.4f}{extra}",
             })
-        same = np.allclose(np.asarray(sc_matmul_reference(a, b, bits=8)),
-                           np.asarray(sc_matmul_mxu_split(a, b, bits=8)),
-                           atol=1e-4)
+
+        ref_counts = recover_counts(outs["reference"], a, b)
+        agree = all(
+            np.array_equal(recover_counts(outs[l], a, b), ref_counts)
+            for l in ("mxu_split", "pallas", "pallas_tuned"))
         rows.append({
-            "name": f"sc_gemm/split_bitexact/{m}x{k}x{n}",
+            "name": f"sc_gemm/bitexact/{m}x{k}x{n}",
             "us_per_call": 0.0,
-            "derived": f"mxu_split == reference: {same}",
+            "derived": f"all impls count-identical to reference: {agree}",
         })
     return rows

@@ -5,7 +5,7 @@ from .tcu import (correlation_encode, pack_stream, popcount_u32, stream_length,
 from .multipliers import (MULTIPLIERS, gaines, jenson, proposed_bitlevel,
                           proposed_closed_form, umul)
 from .sc_numerics import (SignMagnitude, dequantize_sign_magnitude,
-                          quantize_sign_magnitude)
+                          quantize_sign_magnitude, recover_counts)
 from .sc_matmul import sc_matmul, sc_matmul_mxu_split, sc_matmul_reference
 from .sc_layers import sc_dense
 from .error_analysis import error_vs_operand_difference, mae, table2_mae
@@ -17,6 +17,7 @@ __all__ = [
     "MULTIPLIERS", "gaines", "jenson", "proposed_bitlevel",
     "proposed_closed_form", "umul",
     "SignMagnitude", "dequantize_sign_magnitude", "quantize_sign_magnitude",
+    "recover_counts",
     "sc_matmul", "sc_matmul_mxu_split", "sc_matmul_reference", "sc_dense",
     "error_vs_operand_difference", "mae", "table2_mae", "hardware_model",
 ]

@@ -98,7 +98,8 @@ def _lfsr_sequence(bits: int, seed: int, taps: int) -> jax.Array:
     return states
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "shared_sng"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "shared_sng", "seed_x", "seed_y"))
 def gaines(x: jax.Array, y: jax.Array, *, bits: int,
            shared_sng: bool = True, seed_x: int = 1, seed_y: int = 0x5A) -> jax.Array:
     """Gaines stochastic multiplier. Returns popcount over the LFSR period.
@@ -107,11 +108,33 @@ def gaines(x: jax.Array, y: jax.Array, *, bits: int,
     With ``shared_sng=True`` both comparators share one LFSR — the standard
     area-saving configuration, which maximally correlates the streams and
     degrades AND-multiplication toward ``min(x, y)``.
+
+    Seeds are LFSR start states and must lie in ``[1, 2**bits)`` (state 0 is
+    the lock-up state; values ≥ N alias modulo the register width and corrupt
+    the first stream bit). ``seed_y`` is only consulted — and therefore only
+    validated — when ``shared_sng=False``. Unsupported widths raise rather
+    than silently running a non-maximal polynomial.
     """
     # maximal-length taps per width (x^8+x^6+x^5+x^4+1 for 8-bit, etc.)
     taps_table = {3: 0b110, 4: 0b1100, 5: 0b10100, 6: 0b110000,
                   7: 0b1100000, 8: 0b10111000}
-    taps = taps_table.get(bits, 0b10111000)
+    if bits not in taps_table:
+        raise ValueError(
+            f"gaines: no maximal-length LFSR taps for bits={bits}; "
+            f"supported widths are {sorted(taps_table)}")
+    taps = taps_table[bits]
+    n = stream_length(bits)
+
+    def _check_seed(name: str, seed: int) -> None:
+        if not 1 <= seed < n:
+            raise ValueError(
+                f"gaines: {name}={seed:#x} outside the {bits}-bit LFSR state "
+                f"space [1, {n}); 0 is the lock-up state and values >= {n} "
+                f"alias modulo the register width")
+
+    _check_seed("seed_x", seed_x)
+    if not shared_sng:
+        _check_seed("seed_y", seed_y)
     r_x = _lfsr_sequence(bits, seed_x, taps)
     r_y = r_x if shared_sng else _lfsr_sequence(bits, seed_y, taps)
 

@@ -19,7 +19,10 @@ Three implementations, all bit-identical:
   the MXU; only the clamped-min residual needs per-pair (VPU) work. Exactness
   in fp32: magnitudes < 2¹⁵ and products < 2²⁴ for any realistic K.
 * ``kernels.sc_matmul`` — the Pallas TPU kernel using the same split with
-  VMEM tiling (see ``src/repro/kernels/``).
+  VMEM tiling (see ``src/repro/kernels/``). Its block configuration
+  (bm, bn, bk, chunk) is swept per problem shape by ``kernels.autotune``
+  and reachable here through ``sc_matmul(..., impl="pallas_tuned")`` or
+  ``impl="auto"``.
 """
 from __future__ import annotations
 
@@ -90,12 +93,18 @@ def sc_matmul_reference(a: jax.Array, b: jax.Array, *, bits: int = 8,
     return counts.astype(jnp.float32) * (nn * qa.scale * qb.scale)
 
 
-def sc_residual_term(sx, mx, sy, my, bits: int, k_block: int = 128) -> jax.Array:
-    """Σ_k s_x s_y · clamp(min(y_low, ⌊(x − msb)/2⌋), 0) — the VPU residual."""
+def sc_residual_term(sx, mx, sy, my, bits: int, chunk: int = 16) -> jax.Array:
+    """Σ_k s_x s_y · clamp(min(y_low, ⌊(x − msb)/2⌋), 0) — the VPU residual.
+
+    K is walked in lane-parallel chunks of ``chunk``: each scan step
+    materializes one (M, chunk, N) broadcast and reduces it over the chunk
+    axis, mirroring the Pallas kernel's chunked-residual layout (DESIGN.md
+    §2.2). ``chunk`` bounds the peak temporary at M·chunk·N int32.
+    """
     half = stream_length(bits) // 2
     m, k = mx.shape
     _, n = my.shape
-    pad = (-k) % k_block
+    pad = (-k) % chunk
     if pad:
         mx = jnp.pad(mx, ((0, 0), (0, pad)))
         sx = jnp.pad(sx, ((0, 0), (0, pad)), constant_values=1)
@@ -104,26 +113,27 @@ def sc_residual_term(sx, mx, sy, my, bits: int, k_block: int = 128) -> jax.Array
     kp = k + pad
 
     def body(carry, kb):
-        x = jax.lax.dynamic_slice_in_dim(mx, kb * k_block, k_block, 1)[:, :, None].astype(jnp.int32)
-        ssx = jax.lax.dynamic_slice_in_dim(sx, kb * k_block, k_block, 1)[:, :, None].astype(jnp.int32)
-        y = jax.lax.dynamic_slice_in_dim(my, kb * k_block, k_block, 0)[None].astype(jnp.int32)
-        ssy = jax.lax.dynamic_slice_in_dim(sy, kb * k_block, k_block, 0)[None].astype(jnp.int32)
+        x = jax.lax.dynamic_slice_in_dim(mx, kb * chunk, chunk, 1)[:, :, None].astype(jnp.int32)
+        ssx = jax.lax.dynamic_slice_in_dim(sx, kb * chunk, chunk, 1)[:, :, None].astype(jnp.int32)
+        y = jax.lax.dynamic_slice_in_dim(my, kb * chunk, chunk, 0)[None].astype(jnp.int32)
+        ssy = jax.lax.dynamic_slice_in_dim(sy, kb * chunk, chunk, 0)[None].astype(jnp.int32)
         msb = (y >= half).astype(jnp.int32)
         y_low = y - msb * half
         res = jnp.maximum(jnp.minimum(y_low, (x - msb) // 2), 0)
         return carry + (ssx * ssy * res).sum(axis=1, dtype=jnp.int32), None
 
-    out, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.int32), jnp.arange(kp // k_block))
+    out, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.int32), jnp.arange(kp // chunk))
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "k_block"))
+@functools.partial(jax.jit, static_argnames=("bits", "chunk"))
 def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
-                        k_block: int = 128) -> jax.Array:
+                        chunk: int = 16) -> jax.Array:
     """TPU-native SC-GEMM: MXU matmul term + VPU clamped-min residual.
 
     Bit-identical to :func:`sc_matmul_reference` (tests assert exact equality
-    of the integer counts).
+    of the integer counts) for every ``chunk``, which only retiles the
+    residual accumulation.
     """
     half = stream_length(bits) // 2
     qa = quantize_sign_magnitude(a, bits=bits)
@@ -135,7 +145,7 @@ def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
     rhs = (qb.sign.astype(jnp.int32) * msb).astype(jnp.float32)
     term1 = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
     # --- VPU residual.
-    term2 = sc_residual_term(qa.sign, qa.mag, qb.sign, qb.mag, bits, k_block)
+    term2 = sc_residual_term(qa.sign, qa.mag, qb.sign, qb.mag, bits, chunk)
     counts = term1 + term2.astype(jnp.float32)
     nn = stream_length(bits)
     return counts * (nn * qa.scale * qb.scale)
@@ -143,7 +153,19 @@ def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
 
 def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
               impl: str = "mxu_split") -> jax.Array:
-    """Dispatching entry point. ``impl`` ∈ {"reference", "mxu_split", "pallas"}."""
+    """Dispatching entry point.
+
+    ``impl`` ∈ {"reference", "mxu_split", "pallas", "pallas_tuned", "auto"}.
+    "pallas_tuned" runs the Pallas kernel with the autotuned block
+    configuration for this problem shape (tuning on first use, then served
+    from the on-disk cache); "auto" picks the implementation for the active
+    backend via :func:`repro.kernels.autotune.choose_impl`.
+    """
+    if impl == "auto":
+        from repro.kernels.autotune import choose_impl
+        m, k = a.shape
+        _, n = b.shape
+        impl = choose_impl(m, k, n, bits=bits)
     if impl == "reference":
         return sc_matmul_reference(a, b, bits=bits)
     if impl == "mxu_split":
@@ -151,4 +173,7 @@ def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
     if impl == "pallas":
         from repro.kernels.ops import sc_matmul_pallas
         return sc_matmul_pallas(a, b, bits=bits)
+    if impl == "pallas_tuned":
+        from repro.kernels.ops import sc_matmul_pallas
+        return sc_matmul_pallas(a, b, bits=bits, tune=True)
     raise ValueError(f"unknown impl {impl!r}")

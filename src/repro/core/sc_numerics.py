@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from .tcu import stream_length
 
-__all__ = ["SignMagnitude", "quantize_sign_magnitude", "dequantize_sign_magnitude"]
+__all__ = ["SignMagnitude", "quantize_sign_magnitude",
+           "dequantize_sign_magnitude", "recover_counts"]
 
 
 class SignMagnitude(NamedTuple):
@@ -51,3 +52,22 @@ def quantize_sign_magnitude(v: jax.Array, *, bits: int,
 
 def dequantize_sign_magnitude(q: SignMagnitude) -> jax.Array:
     return (q.sign.astype(jnp.float32) * q.mag.astype(jnp.float32)) * q.scale
+
+
+def recover_counts(out, a, b, *, bits: int = 8):
+    """De-scale an SC-GEMM float output back to its exact integer counts.
+
+    The final ``counts · N·Δ_a·Δ_b`` multiply may differ by 1 ulp between
+    jitted and eager implementations, so exact-equality comparisons (tests,
+    benchmark bit-exactness rows) must be made on the recovered integers —
+    counts stay below 2²⁴, so float64 rounding is exact. Returns an int64
+    numpy array.
+    """
+    import numpy as np
+
+    from .tcu import stream_length
+
+    qa = quantize_sign_magnitude(jnp.asarray(a, jnp.float32), bits=bits)
+    qb = quantize_sign_magnitude(jnp.asarray(b, jnp.float32), bits=bits)
+    scale = stream_length(bits) * np.float64(qa.scale) * np.float64(qb.scale)
+    return np.round(np.asarray(out, np.float64) / scale).astype(np.int64)

@@ -1,4 +1,5 @@
 """Pallas TPU kernels for the paper's compute hot-spot (the SC multiplier
-inside GEMM): sc_matmul (MXU/VPU split) and sc_bitops (bit-parallel packed
-datapath). ops.py holds the jit'd wrappers, ref.py the pure-jnp oracles."""
-from . import ops, ref
+inside GEMM): sc_matmul (MXU/VPU split, chunked residual) and sc_bitops
+(bit-parallel packed datapath). ops.py holds the jit'd wrappers, ref.py the
+pure-jnp oracles, autotune.py the per-shape block-configuration sweep."""
+from . import autotune, ops, ref

@@ -1,0 +1,8 @@
+"""Version-compat shims for the Pallas TPU API surface."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Renamed TPUCompilerParams -> CompilerParams across jax releases; accept both.
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)

@@ -1,0 +1,255 @@
+"""Autotuner for the SC-GEMM Pallas kernel: per-shape (bm, bn, bk, chunk)
+sweep with a persistent on-disk cache.
+
+The kernel's throughput depends on the block configuration — MXU tile sizes
+(bm, bn), the K-block bk held in VMEM, and the residual's lane-parallel chunk
+width (DESIGN.md §2.3). The best point varies with the problem shape, so the
+tuner measures a pruned candidate grid once per (backend, M, K, N, bits) key
+and persists the winner as JSON. Subsequent calls — including across
+processes — are served from the cache.
+
+Entry points:
+
+* :func:`get_or_tune` — cached lookup + sweep; used by
+  ``ops.sc_matmul_pallas(..., tune=True)``.
+* :func:`choose_impl` — backend-level dispatch behind
+  ``core.sc_matmul(..., impl="auto")``.
+* :class:`AutotuneCache` — the JSON cache (default location
+  ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/sc_gemm_autotune.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Iterable, Sequence
+
+import jax
+
+__all__ = [
+    "KernelConfig",
+    "AutotuneCache",
+    "candidate_configs",
+    "autotune",
+    "get_or_tune",
+    "choose_impl",
+    "default_cache_path",
+]
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+CACHE_VERSION = 1
+
+#: VMEM budget used to prune candidates; conservative fraction of ~16 MiB.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """One point in the kernel's tuning space."""
+    bm: int = 128
+    bn: int = 128
+    bk: int = 512
+    chunk: int = 8
+
+    def vmem_bytes(self) -> int:
+        """Estimated VMEM working set of one grid step (DESIGN.md §2.2)."""
+        lhs = 2 * self.bm * self.bk          # sx, mx
+        rhs = 4 * self.bk * self.bn          # sy, my, msb, y_low
+        out = 2 * self.bm * self.bn          # acc scratch + out tile
+        bcast = 2 * self.bm * self.chunk * self.bn   # residual r and s
+        return 4 * (lhs + rhs + out + bcast)
+
+    def is_valid(self) -> bool:
+        return (self.bm % 8 == 0 and self.bn % 128 == 0 and
+                self.bk % self.chunk == 0 and self.chunk > 0)
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env)
+    base = Path(os.environ.get("XDG_CACHE_HOME", str(Path.home() / ".cache")))
+    return base / "repro" / "sc_gemm_autotune.json"
+
+
+class AutotuneCache:
+    """Persistent shape -> KernelConfig map, stored as one JSON document."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self._entries: dict[str, dict] = {}
+        self._load()
+
+    @staticmethod
+    def key(m: int, k: int, n: int, bits: int, backend: str | None = None) -> str:
+        backend = backend or jax.default_backend()
+        return f"{backend}:m{m}:k{k}:n{n}:b{bits}"
+
+    def _load(self) -> None:
+        try:
+            doc = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return
+        if doc.get("version") == CACHE_VERSION:
+            self._entries = doc.get("entries", {})
+
+    def get(self, key: str) -> KernelConfig | None:
+        ent = self._entries.get(key)
+        if ent is None:
+            return None
+        cfg = KernelConfig(**{f: ent[f] for f in ("bm", "bn", "bk", "chunk")})
+        return cfg if cfg.is_valid() else None
+
+    def put(self, key: str, cfg: KernelConfig, *,
+            elapsed_us: float | None = None) -> None:
+        ent = asdict(cfg)
+        ent["tuned_at"] = time.time()
+        if elapsed_us is not None:
+            ent["us_per_call"] = elapsed_us
+        self._entries[key] = ent
+        self._save()
+
+    def _save(self) -> None:
+        """Best-effort persist; an unwritable path degrades to in-memory."""
+        doc = {"version": CACHE_VERSION, "entries": self._entries}
+        tmp = None
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            # Atomic replace so concurrent tuners never observe a torn file.
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+_DEFAULT_CACHES: dict[Path, AutotuneCache] = {}
+
+
+def _default_cache() -> AutotuneCache:
+    """Process-wide AutotuneCache per resolved path.
+
+    Keyed on the path (not a singleton) so $REPRO_AUTOTUNE_CACHE changes take
+    effect; reusing the instance keeps the hot tuned-matmul path free of
+    per-call file reads — entries are served from memory after the first
+    lookup.
+    """
+    path = default_cache_path()
+    cache = _DEFAULT_CACHES.get(path)
+    if cache is None:
+        cache = _DEFAULT_CACHES[path] = AutotuneCache(path)
+    return cache
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def candidate_configs(m: int, k: int, n: int, *,
+                      vmem_budget: int = VMEM_BUDGET_BYTES
+                      ) -> list[KernelConfig]:
+    """Pruned tuning grid for an (M, K, N) problem.
+
+    Blocks larger than the (128-aligned) problem extent only add padding
+    work, so they are dropped; every candidate satisfies the VMEM budget and
+    chunk | bk.
+    """
+    m_cap = _round_up(max(m, 8), 128)
+    n_cap = _round_up(max(n, 128), 128)
+    k_cap = _round_up(max(k, 128), 128)
+    out: list[KernelConfig] = []
+    for bm in (128, 256):
+        if bm > m_cap and bm != 128:
+            continue
+        for bn in (128, 256):
+            if bn > n_cap and bn != 128:
+                continue
+            for bk in (128, 256, 512):
+                if bk > k_cap and bk != 128:
+                    continue
+                for chunk in (4, 8, 16):
+                    cfg = KernelConfig(bm=bm, bn=bn, bk=bk, chunk=chunk)
+                    if cfg.is_valid() and cfg.vmem_bytes() <= vmem_budget:
+                        out.append(cfg)
+    return out
+
+
+def _time_config(a, b, bits: int, cfg: KernelConfig, iters: int) -> float:
+    """Median-free best-of-``iters`` wall time (µs) of one tuned call."""
+    from .ops import sc_matmul_pallas
+
+    def call():
+        return jax.block_until_ready(
+            sc_matmul_pallas(a, b, bits=bits, bm=cfg.bm, bn=cfg.bn,
+                             bk=cfg.bk, chunk=cfg.chunk))
+
+    call()  # compile
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        call()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def autotune(a, b, *, bits: int = 8,
+             candidates: Sequence[KernelConfig] | None = None,
+             iters: int = 3,
+             max_candidates: int | None = None) -> tuple[KernelConfig, float]:
+    """Sweep the candidate grid on live data; return (best config, best µs)."""
+    m, k = a.shape
+    _, n = b.shape
+    cands: Iterable[KernelConfig] = (candidates if candidates is not None
+                                     else candidate_configs(m, k, n))
+    cands = list(cands)
+    if max_candidates is not None:
+        cands = cands[:max_candidates]
+    if not cands:
+        raise ValueError(f"no tuning candidates for shape ({m},{k})x({k},{n})")
+    best_cfg, best_us = None, float("inf")
+    for cfg in cands:
+        us = _time_config(a, b, bits, cfg, iters)
+        if us < best_us:
+            best_cfg, best_us = cfg, us
+    return best_cfg, best_us
+
+
+def get_or_tune(a, b, *, bits: int = 8,
+                cache: AutotuneCache | None = None,
+                candidates: Sequence[KernelConfig] | None = None,
+                iters: int = 3) -> KernelConfig:
+    """Cached per-shape best config; runs the sweep on a cache miss."""
+    m, k = a.shape
+    _, n = b.shape
+    cache = cache if cache is not None else _default_cache()
+    key = cache.key(m, k, n, bits)
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
+    cfg, us = autotune(a, b, bits=bits, candidates=candidates, iters=iters)
+    cache.put(key, cfg, elapsed_us=us)
+    return cfg
+
+
+def choose_impl(m: int, k: int, n: int, *, bits: int = 8) -> str:
+    """Implementation choice behind ``sc_matmul(..., impl="auto")``.
+
+    On TPU the Pallas kernel with autotuned blocks wins for every shape large
+    enough to tile; tiny problems and non-TPU backends (where Pallas runs in
+    interpret mode) fall back to the XLA-fused MXU split.
+    """
+    if jax.default_backend() == "tpu" and min(m, n) * k >= 128 * 128:
+        return "pallas_tuned"
+    return "mxu_split"

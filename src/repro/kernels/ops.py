@@ -33,13 +33,11 @@ def _pad_to(arr, mult, axis, value=0):
     return jnp.pad(arr, widths, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret"))
-def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
-                     bm: int = 128, bn: int = 128, bk: int = 512,
-                     interpret: bool | None = None) -> jax.Array:
-    """SC-GEMM ``a @ b`` through the Pallas kernel. ``a: (M, K)``, ``b: (K, N)``."""
-    if interpret is None:
-        interpret = default_interpret()
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "chunk",
+                                             "interpret"))
+def _sc_matmul_pallas_jit(a: jax.Array, b: jax.Array, *, bits: int,
+                          bm: int, bn: int, bk: int, chunk: int,
+                          interpret: bool) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
     qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits)
@@ -49,10 +47,31 @@ def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
     mx = _pad_to(_pad_to(qa.mag, bm, 0), bk, 1)
     sy = _pad_to(_pad_to(qb.sign.astype(jnp.int32), bk, 0, 1), bn, 1, 1)
     my = _pad_to(_pad_to(qb.mag, bk, 0), bn, 1)
-    counts = sc_matmul_counts_pallas(sx, mx, sy, my, bits=bits,
-                                     bm=bm, bn=bn, bk=bk, interpret=interpret)
+    counts = sc_matmul_counts_pallas(sx, mx, sy, my, bits=bits, bm=bm, bn=bn,
+                                     bk=bk, chunk=chunk, interpret=interpret)
     counts = counts[:m, :n]
     return counts * (stream_length(bits) * qa.scale * qb.scale)
+
+
+def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
+                     bm: int = 128, bn: int = 128, bk: int = 512,
+                     chunk: int = 8, interpret: bool | None = None,
+                     tune: bool = False) -> jax.Array:
+    """SC-GEMM ``a @ b`` through the Pallas kernel. ``a: (M, K)``, ``b: (K, N)``.
+
+    With ``tune=True`` the block configuration (bm, bn, bk, chunk) is resolved
+    through the :mod:`repro.kernels.autotune` cache (sweeping candidates on
+    the first call for this problem shape) and the explicit block arguments
+    are ignored.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if tune:
+        from .autotune import get_or_tune
+        cfg = get_or_tune(a, b, bits=bits)
+        bm, bn, bk, chunk = cfg.bm, cfg.bn, cfg.bk, cfg.chunk
+    return _sc_matmul_pallas_jit(a, b, bits=bits, bm=bm, bn=bn, bk=bk,
+                                 chunk=chunk, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))

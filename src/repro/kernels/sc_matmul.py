@@ -8,12 +8,20 @@ The paper's multiplier inside a GEMM decomposes per DESIGN.md §2.1 as
 
 Tiling: grid (M/bm, N/bn, K/bk), K innermost ("arbitrary" semantics) so the
 fp32 accumulator lives in a VMEM scratch tile across K steps. MXU dims are
-128-aligned by the ops.py wrapper. The residual loops over the K block with a
-(bm, bn) vector op per k — pure VPU work with no (bm, bk, bn) blow-up, keeping
-the VMEM working set at
+128-aligned by the ops.py wrapper.
 
-    bm·bk (lhs mag+sign) + bk·bn (rhs) + bm·bn (acc + out)  ≈
-    2·128·512·4B + 2·512·128·4B + 2·128·128·4B ≈ 1.2 MiB « 16 MiB VMEM.
+The residual is computed in k-chunks of ``chunk`` lanes (DESIGN.md §2.2):
+each of the ``bk/chunk`` loop iterations materializes a (bm, chunk, bn)
+broadcast and reduces it over the chunk axis — ``chunk`` (bm, bn) vector ops
+issued as one fused VPU region instead of ``bk`` sequential dependent steps.
+VMEM working set with the defaults (bm = bn = 128, bk = 512, chunk = 8):
+
+    bm·bk (lhs mag+sign) + bk·bn (rhs, 4 planes) + bm·bn (acc + out)
+      + bm·chunk·bn (residual broadcast)
+    ≈ 2·128·512·4B + 4·512·128·4B + 2·128·128·4B + 128·8·128·4B ≈ 2.2 MiB
+
+comfortably under the ~16 MiB VMEM budget; the autotuner
+(``kernels.autotune``) sweeps (bm, bn, bk, chunk) under the same bound.
 """
 from __future__ import annotations
 
@@ -24,10 +32,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 __all__ = ["sc_matmul_counts_pallas"]
 
 
-def _kernel(bits: int, bk: int, nsteps: int,
+def _kernel(bits: int, bk: int, chunk: int, nsteps: int,
             sx_ref, mx_ref, sy_ref, my_ref, out_ref, acc_ref):
     """One (bm, bn) output tile; K accumulated across grid steps via scratch."""
     half = (1 << bits) // 2
@@ -49,20 +59,23 @@ def _kernel(bits: int, bk: int, nsteps: int,
     rhs = (sy * msb).astype(jnp.float32)
     acc = jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
 
-    # ---- VPU residual: one (bm, bn) vector op per k in the block.
-    sx_f = sx.astype(jnp.float32)
-    sy_f = sy.astype(jnp.float32)
+    # ---- VPU residual: k-chunked lane-parallel accumulation. Each iteration
+    # broadcasts a (bm, chunk, bn) block and reduces over the chunk axis in
+    # int32 (exact: chunk·max_residual < 16·2^15 « 2^31), then folds into the
+    # fp32 accumulator.
+    def body(ci, res):
+        k0 = ci * chunk
+        x_c = jax.lax.dynamic_slice_in_dim(mx, k0, chunk, axis=1)      # (bm, c)
+        sx_c = jax.lax.dynamic_slice_in_dim(sx, k0, chunk, axis=1)     # (bm, c)
+        m_c = jax.lax.dynamic_slice_in_dim(msb, k0, chunk, axis=0)     # (c, bn)
+        yl_c = jax.lax.dynamic_slice_in_dim(y_low, k0, chunk, axis=0)  # (c, bn)
+        sy_c = jax.lax.dynamic_slice_in_dim(sy, k0, chunk, axis=0)     # (c, bn)
+        r = jnp.maximum(
+            jnp.minimum(yl_c[None], (x_c[:, :, None] - m_c[None]) // 2), 0)
+        s = sx_c[:, :, None] * sy_c[None]                       # (bm, c, bn)
+        return res + (s * r).sum(axis=1, dtype=jnp.int32).astype(jnp.float32)
 
-    def body(k, res):
-        x_k = jax.lax.dynamic_slice_in_dim(mx, k, 1, axis=1)       # (bm, 1)
-        m_k = jax.lax.dynamic_slice_in_dim(msb, k, 1, axis=0)      # (1, bn)
-        yl_k = jax.lax.dynamic_slice_in_dim(y_low, k, 1, axis=0)   # (1, bn)
-        r = jnp.maximum(jnp.minimum(yl_k, (x_k - m_k) // 2), 0)
-        s = (jax.lax.dynamic_slice_in_dim(sx_f, k, 1, axis=1) *
-             jax.lax.dynamic_slice_in_dim(sy_f, k, 1, axis=0))
-        return res + s * r.astype(jnp.float32)
-
-    acc = jax.lax.fori_loop(0, bk, body, acc)
+    acc = jax.lax.fori_loop(0, bk // chunk, body, acc)
     acc_ref[...] += acc
 
     @pl.when(pl.program_id(2) == nsteps - 1)
@@ -71,23 +84,28 @@ def _kernel(bits: int, bk: int, nsteps: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+                   static_argnames=("bits", "bm", "bn", "bk", "chunk",
+                                    "interpret"))
 def sc_matmul_counts_pallas(sx, mx, sy, my, *, bits: int = 8,
                             bm: int = 128, bn: int = 128, bk: int = 512,
+                            chunk: int = 8,
                             interpret: bool = False) -> jax.Array:
     """Signed SC-GEMM counts (float32 (M, N), exact integers) via Pallas.
 
     Inputs must be pre-padded to multiples of the block sizes (ops.py does
-    this): ``sx, mx: (M, K)`` int8/int32; ``sy, my: (K, N)``.
+    this): ``sx, mx: (M, K)`` int8/int32; ``sy, my: (K, N)``. ``chunk`` is the
+    residual's k-chunk width and must divide ``bk``.
     """
     m, k = mx.shape
     k2, n = my.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
         f"unpadded shapes ({m},{k})x({k2},{n}) for blocks ({bm},{bn},{bk})")
+    assert 0 < chunk <= bk and bk % chunk == 0, (
+        f"residual chunk {chunk} must divide the K block {bk}")
     nsteps = k // bk
 
     return pl.pallas_call(
-        functools.partial(_kernel, bits, bk, nsteps),
+        functools.partial(_kernel, bits, bk, chunk, nsteps),
         grid=(m // bm, n // bn, nsteps),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),   # sx
@@ -98,7 +116,7 @@ def sc_matmul_counts_pallas(sx, mx, sy, my, *, bits: int = 8,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(sx, mx, sy, my)

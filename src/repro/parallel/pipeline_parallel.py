@@ -21,6 +21,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["pipeline_forward"]
 
+# jax.shard_map (with check_vma) only exists on newer jax; 0.4.x ships it as
+# jax.experimental.shard_map.shard_map with the check_rep spelling.
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 
 def pipeline_forward(stage_fn: Callable, stage_params, x: jax.Array, *,
                      mesh: Mesh, axis: str = "stage",
@@ -72,11 +81,11 @@ def pipeline_forward(stage_fn: Callable, stage_params, x: jax.Array, *,
         return outputs
 
     shard = functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False)
+        **{_CHECK_KW: False})
 
     outputs = shard(per_stage)(stage_params, micro)
     return outputs.reshape(b, *x.shape[1:])

@@ -1,0 +1,93 @@
+"""Property-check shim: hypothesis when installed, fixed-seed sweeps otherwise.
+
+Test modules import ``given``, ``settings`` and ``st`` from here instead of
+from ``hypothesis`` directly, so a missing hypothesis install degrades to a
+deterministic example sweep instead of killing collection of half the suite
+(the failure mode this repo shipped with).
+
+The fallback implements just the strategy surface these tests use —
+``st.integers``, ``st.sampled_from`` and ``st.data`` — and honours
+``settings(max_examples=...)``. Draws come from one ``random.Random`` seeded
+per test function name, so failures reproduce run-to-run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    class _Strategy:
+        def sample(self, rng: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value, self.max_value = min_value, max_value
+
+        def sample(self, rng):
+            return rng.randint(self.min_value, self.max_value)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng):
+            return rng.choice(self.elements)
+
+    class _DataStrategy(_Strategy):
+        """Marker; ``given`` materializes it as a fresh ``_DataObject``."""
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def settings(max_examples: int = 50, deadline=None, **_kw):
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_propcheck_max_examples", 50)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(n):
+                    drawn = [(_DataObject(rng)
+                              if isinstance(s, _DataStrategy)
+                              else s.sample(rng)) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # Hide the strategy parameters from pytest's fixture resolution
+            # (functools.wraps exposes them via __wrapped__ otherwise).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco

@@ -1,0 +1,118 @@
+"""kernels.autotune: candidate pruning, cache round-trip, tuned dispatch."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.autotune import (AutotuneCache, KernelConfig, autotune,
+                                    candidate_configs, choose_impl,
+                                    get_or_tune, VMEM_BUDGET_BYTES)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ----------------------------------------------------------------- candidates
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (64, 200, 40),
+                                   (256, 1024, 256), (1000, 4000, 1000)])
+def test_candidate_configs_valid(m, k, n):
+    cands = candidate_configs(m, k, n)
+    assert cands, "pruning must never empty the grid"
+    for cfg in cands:
+        assert cfg.is_valid()
+        assert cfg.bk % cfg.chunk == 0
+        assert cfg.vmem_bytes() <= VMEM_BUDGET_BYTES
+
+
+def test_candidate_configs_prunes_oversized_blocks():
+    small = candidate_configs(8, 16, 8)
+    assert all(c.bm == 128 and c.bn == 128 and c.bk == 128 for c in small)
+    big = candidate_configs(1024, 4096, 1024)
+    assert any(c.bk == 512 for c in big)
+
+
+# ---------------------------------------------------------------------- cache
+
+def test_cache_roundtrip_across_instances(tmp_path):
+    path = tmp_path / "tune.json"
+    cache = AutotuneCache(path)
+    key = cache.key(64, 200, 40, 8, backend="cpu")
+    assert cache.get(key) is None
+    cfg = KernelConfig(bm=128, bn=128, bk=256, chunk=16)
+    cache.put(key, cfg, elapsed_us=123.4)
+    assert cache.get(key) == cfg
+    # fresh instance re-reads from disk
+    reloaded = AutotuneCache(path)
+    assert len(reloaded) == 1
+    assert reloaded.get(key) == cfg
+    doc = json.loads(path.read_text())
+    assert doc["version"] == 1
+    assert doc["entries"][key]["us_per_call"] == pytest.approx(123.4)
+
+
+def test_cache_tolerates_corrupt_file(tmp_path):
+    path = tmp_path / "tune.json"
+    path.write_text("{not json")
+    cache = AutotuneCache(path)          # must not raise
+    assert len(cache) == 0
+    cache.put(cache.key(1, 2, 3, 8, backend="cpu"), KernelConfig())
+    assert len(AutotuneCache(path)) == 1
+
+
+def test_cache_unwritable_path_degrades_to_memory():
+    cache = AutotuneCache("/proc/nonexistent-dir/tune.json")
+    key = cache.key(1, 2, 3, 8, backend="cpu")
+    cache.put(key, KernelConfig())           # must not raise
+    assert cache.get(key) == KernelConfig()  # still served in-memory
+
+
+def test_cache_rejects_invalid_entry(tmp_path):
+    path = tmp_path / "tune.json"
+    cache = AutotuneCache(path)
+    key = cache.key(4, 4, 4, 8, backend="cpu")
+    cache._entries[key] = {"bm": 128, "bn": 128, "bk": 128, "chunk": 3}
+    assert cache.get(key) is None        # chunk ∤ bk -> treated as a miss
+
+
+# ----------------------------------------------------------------- tuned path
+
+def test_get_or_tune_sweeps_then_hits_cache(tmp_path):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a, b = _rand(k1, (32, 64)), _rand(k2, (64, 16))
+    cache = AutotuneCache(tmp_path / "tune.json")
+    cands = [KernelConfig(bk=128, chunk=8), KernelConfig(bk=128, chunk=16)]
+    cfg = get_or_tune(a, b, bits=8, cache=cache, candidates=cands, iters=1)
+    assert cfg in cands
+    assert len(cache) == 1
+    # second call must be a pure cache hit (no candidates consulted)
+    again = get_or_tune(a, b, bits=8, cache=cache, candidates=[], iters=1)
+    assert again == cfg
+
+
+def test_autotune_returns_best_of_candidates():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a, b = _rand(k1, (16, 32)), _rand(k2, (32, 16))
+    cands = [KernelConfig(bk=128, chunk=4), KernelConfig(bk=128, chunk=16)]
+    cfg, us = autotune(a, b, bits=8, candidates=cands, iters=1)
+    assert cfg in cands and us > 0
+
+
+def test_sc_matmul_pallas_tuned_matches_oracle(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "tune.json"))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    a, b = _rand(k1, (40, 96)), _rand(k2, (96, 24))
+    out = ops.sc_matmul_pallas(a, b, bits=8, tune=True)
+    expected = ref.sc_matmul_ref(a, b, bits=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-5, atol=1e-5)
+    assert (tmp_path / "tune.json").exists()
+
+
+def test_choose_impl_cpu_fallback():
+    assert jax.default_backend() != "tpu"
+    assert choose_impl(512, 512, 512, bits=8) == "mxu_split"

@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.sc_matmul import sc_matmul_counts_pallas
@@ -71,6 +70,56 @@ def test_sc_matmul_kernel_property_shapes(m, k, n):
     expected = ref.sc_matmul_ref(a, b, bits=8)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
                                rtol=1e-5, atol=1e-5)
+
+
+from repro.core import recover_counts as _exact_counts
+
+
+@pytest.mark.parametrize("m,k,n,bk", [
+    (64, 100, 32, 512),       # K < bk: whole K fits in the pad of one block
+    (130, 512, 130, 512),     # M, N just over the 128 tile -> ragged M/N pad
+    (128, 700, 128, 512),     # K not a multiple of bk, > one block
+    (96, 130, 40, 128),       # K barely over bk with small blocks
+    (1, 513, 1, 256),         # degenerate M/N with multi-block padded K
+])
+def test_sc_matmul_padding_exact_counts(m, k, n, bk):
+    """ops.sc_matmul_pallas padding path: exact-count agreement with the
+    reference on awkward (non-block-aligned) shapes."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + k * 3 + n))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n))
+    from repro.core import quantize_sign_magnitude
+    qa = quantize_sign_magnitude(a, bits=8)
+    qb = quantize_sign_magnitude(b, bits=8)
+    expected = np.asarray(
+        ref.sc_matmul_counts_ref(qa.sign, qa.mag, qb.sign, qb.mag, 8)
+    ).astype(np.int64)
+    out = ops.sc_matmul_pallas(a, b, bits=8, interpret=True, bk=bk)
+    np.testing.assert_array_equal(_exact_counts(out, a, b), expected)
+    # reference impl agrees too (floats, so via its own exact counts)
+    ref_out = ref.sc_matmul_ref(a, b, bits=8)
+    np.testing.assert_array_equal(_exact_counts(ref_out, a, b), expected)
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 8, 64, 128])
+def test_sc_matmul_kernel_chunk_invariant(chunk):
+    """The chunked residual only retiles the accumulation: every chunk width
+    must produce bit-identical counts."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(chunk))
+    a = _rand(k1, (64, 200))
+    b = _rand(k2, (200, 40))
+    base = np.asarray(ops.sc_matmul_pallas(a, b, bits=8, interpret=True,
+                                           bk=128, chunk=128))
+    out = np.asarray(ops.sc_matmul_pallas(a, b, bits=8, interpret=True,
+                                          bk=128, chunk=chunk))
+    np.testing.assert_array_equal(base, out)
+
+
+def test_sc_matmul_kernel_chunk_must_divide_bk():
+    a = jnp.ones((8, 16), jnp.float32)
+    b = jnp.ones((16, 8), jnp.float32)
+    with pytest.raises(AssertionError, match="chunk"):
+        ops.sc_matmul_pallas(a, b, bits=8, interpret=True, bk=128, chunk=3)
 
 
 # -------------------------------------------------- bit-parallel stream kernel

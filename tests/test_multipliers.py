@@ -8,8 +8,7 @@ would be too slow.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (correlation_encode, gaines, jenson, pack_stream,
                         popcount_u32, proposed_bitlevel, proposed_closed_form,
@@ -126,6 +125,25 @@ def test_gaines_shared_sng_is_min():
     y = jnp.arange(0, 256, 13, dtype=jnp.int32)[: x.shape[0]]
     counts = gaines(x, y, bits=8, shared_sng=True)
     np.testing.assert_array_equal(np.asarray(counts), np.minimum(np.asarray(x), np.asarray(y)))
+
+
+def test_gaines_rejects_bad_seeds_and_widths():
+    """Seeds outside [1, N) and widths without maximal-length taps raise
+    instead of silently corrupting the stream (regression: seed_y=0x5A used
+    to alias into the LFSR state space for bits < 7)."""
+    x = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="seed_x"):
+        gaines(x, x, bits=8, seed_x=0)
+    with pytest.raises(ValueError, match="seed_x"):
+        gaines(x, x, bits=8, seed_x=256)
+    with pytest.raises(ValueError, match="seed_y"):
+        gaines(x, x, bits=4, shared_sng=False)      # default seed_y=0x5A >= 16
+    with pytest.raises(ValueError, match="taps"):
+        gaines(x, x, bits=2)
+    with pytest.raises(ValueError, match="taps"):
+        gaines(x, x, bits=9)
+    # seed_y is unused (and so not validated) when the SNG is shared
+    assert int(gaines(jnp.int32(3), jnp.int32(5), bits=4)) == 3
 
 
 def test_gaines_independent_unbiased():

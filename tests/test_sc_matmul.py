@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st
 
 from repro.core import (quantize_sign_magnitude, dequantize_sign_magnitude,
                         sc_matmul_mxu_split, sc_matmul_reference, sc_dense)
@@ -32,6 +31,29 @@ def test_mxu_split_equals_reference_property(m, k, n, bits):
     ref = sc_matmul_reference(a, b, bits=bits)
     split = sc_matmul_mxu_split(a, b, bits=bits)
     np.testing.assert_allclose(np.asarray(split), np.asarray(ref), rtol=0, atol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 16, 128, 500])
+def test_residual_chunk_invariant(chunk):
+    """sc_residual_term's chunked lane-parallel accumulation is exact for any
+    chunk width (including chunk > K and chunk ∤ K)."""
+    from repro.core.sc_matmul import sc_residual_term
+    from repro.core import quantize_sign_magnitude
+    k1, k2 = jax.random.split(jax.random.PRNGKey(chunk))
+    qa = quantize_sign_magnitude(_rand(k1, (24, 37)), bits=8)
+    qb = quantize_sign_magnitude(_rand(k2, (37, 18)), bits=8)
+    base = np.asarray(sc_residual_term(qa.sign, qa.mag, qb.sign, qb.mag, 8, 37))
+    out = np.asarray(sc_residual_term(qa.sign, qa.mag, qb.sign, qb.mag, 8, chunk))
+    np.testing.assert_array_equal(base, out)
+
+
+@pytest.mark.parametrize("chunk", [1, 8, 64])
+def test_mxu_split_chunk_equals_reference(chunk):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(chunk + 77))
+    a, b = _rand(k1, (16, 100)), _rand(k2, (100, 12))
+    ref = sc_matmul_reference(a, b, bits=8)
+    split = sc_matmul_mxu_split(a, b, bits=8, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(ref), rtol=0, atol=1e-4)
 
 
 def test_sc_matmul_approximates_exact_matmul():
