@@ -1,0 +1,109 @@
+"""CI regression gate over the ``BENCH_sc_gemm.json`` trajectory.
+
+Compares the newest run against the most recent *earlier* run with the same
+(backend, interpret, smoke) signature — in CI that is the last committed
+record, since the smoke bench appends its own run first — and fails when any
+shared timing row regresses by more than ``--factor`` (default 2x, generous
+because shared CI runners are noisy). Rows with ``us_per_call == 0``
+(bit-exactness markers) are skipped, as are rows where *both* timings sit
+under ``--min-us``: sub-half-millisecond rows are scheduler-noise-dominated
+on shared runners (back-to-back local runs show >2.5x swings) and a
+regression that stays below the floor is not actionable anyway.
+
+Caveat: the signature carries no machine identity, so the last committed
+record may come from different hardware than the CI runner (each record's
+``host``/``cpus`` fields say where it ran). The 2x factor absorbs typical
+container-vs-runner deltas; if a fleet change makes that systematic, loosen
+``--factor`` in CI or commit a runner-produced baseline record.
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--json PATH]
+                                                         [--factor 2.0]
+                                                         [--min-us 500]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .run import DEFAULT_TRAJECTORY
+
+DEFAULT_FACTOR = 2.0
+DEFAULT_MIN_US = 500.0
+
+
+def _signature(run: dict) -> tuple:
+    return (run.get("backend"), run.get("interpret"), run.get("smoke"))
+
+
+def find_baseline(runs: list[dict]) -> tuple[dict, dict | None]:
+    """(latest run, most recent earlier run with the same signature)."""
+    latest = runs[-1]
+    sig = _signature(latest)
+    for run in reversed(runs[:-1]):
+        if _signature(run) == sig:
+            return latest, run
+    return latest, None
+
+
+def compare(latest: dict, baseline: dict, *,
+            factor: float = DEFAULT_FACTOR,
+            min_us: float = DEFAULT_MIN_US) -> list[str]:
+    """Human-readable failure lines for every row slower than factor·baseline."""
+    base_us = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])
+               if r.get("us_per_call", 0) > 0}
+    failures = []
+    for row in latest.get("rows", []):
+        us = row.get("us_per_call", 0)
+        old = base_us.get(row.get("name"))
+        if not old or us <= 0:
+            continue
+        if us <= min_us and old <= min_us:
+            continue                      # both under the noise floor
+        if us > factor * old:
+            failures.append(
+                f"{row['name']}: {us:.1f}us vs baseline {old:.1f}us "
+                f"({us / old:.2f}x > {factor:.2f}x allowed; baseline sha "
+                f"{baseline.get('git_sha')}, latest sha {latest.get('git_sha')})")
+    return failures
+
+
+def check(path: Path, *, factor: float = DEFAULT_FACTOR,
+          min_us: float = DEFAULT_MIN_US) -> int:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        print(f"[check_regression] cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    runs = doc.get("runs") or []
+    if not runs:
+        print(f"[check_regression] {path} has no runs; nothing to compare")
+        return 0
+    latest, baseline = find_baseline(runs)
+    if baseline is None:
+        print(f"[check_regression] no earlier run matches signature "
+              f"{_signature(latest)}; nothing to compare")
+        return 0
+    failures = compare(latest, baseline, factor=factor, min_us=min_us)
+    n = sum(1 for r in latest.get("rows", []) if r.get("us_per_call", 0) > 0)
+    if failures:
+        for line in failures:
+            print(f"[check_regression] REGRESSION {line}", file=sys.stderr)
+        return 1
+    print(f"[check_regression] ok: {n} timing rows within {factor:.2f}x of "
+          f"baseline ({baseline.get('timestamp')}, sha {baseline.get('git_sha')})")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", type=Path, default=DEFAULT_TRAJECTORY)
+    ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
+    ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US)
+    args = ap.parse_args()
+    raise SystemExit(check(args.json, factor=args.factor, min_us=args.min_us))
+
+
+if __name__ == "__main__":
+    main()

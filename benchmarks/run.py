@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -21,9 +22,35 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_TRAJECTORY = REPO_ROOT / "BENCH_sc_gemm.json"
 
 
+def git_sha() -> str | None:
+    """Short HEAD SHA of the repo (with a ``-dirty`` marker when the working
+    tree has uncommitted changes, so a record is never attributed to code
+    the named commit did not contain), or None outside a checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        sha = out.stdout.strip()
+        if not sha:
+            return None
+        status = subprocess.run(["git", "status", "--porcelain"],
+                                cwd=REPO_ROOT, capture_output=True, text=True,
+                                timeout=10)
+        return sha + ("-dirty" if status.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
 def append_trajectory(path: Path, rows: list[dict], *, smoke: bool) -> None:
-    """Append one run record to the JSON trajectory file."""
+    """Append one run record to the JSON trajectory file.
+
+    Each record carries the git SHA, backend, and interpret flag so
+    ``benchmarks.check_regression`` can compare like with like (interpret-mode
+    CPU timings are meaningless against compiled TPU ones).
+    """
     import jax
+
+    from repro.kernels.ops import default_interpret
     doc = {"runs": []}
     try:
         loaded = json.loads(path.read_text())
@@ -31,9 +58,17 @@ def append_trajectory(path: Path, rows: list[dict], *, smoke: bool) -> None:
             doc = loaded
     except (OSError, ValueError):
         pass
+    import os
+    import platform
     doc["runs"].append({
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "backend": jax.default_backend(),
+        "git_sha": git_sha(),
+        "interpret": default_interpret(),
+        # informational only (not part of the regression-gate signature):
+        # flags cross-machine baselines when a gate failure looks suspicious
+        "host": platform.node(),
+        "cpus": os.cpu_count(),
         "smoke": smoke,
         "rows": rows,
     })

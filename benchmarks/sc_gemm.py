@@ -9,8 +9,6 @@ shrinks the grid and the tuning sweep for CI.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,11 +25,11 @@ TUNE_CANDIDATE_CAP = 8
 
 
 def _time(fn, *args, iters=3):
-    jax.block_until_ready(fn(*args))        # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+    """Best-of-``iters`` wall time (µs) via the tuner's shared estimator, so
+    bench records and autotune decisions stay comparable; best-of (not mean)
+    keeps the regression gate (benchmarks/check_regression.py) low-variance."""
+    from repro.kernels.autotune import best_of_us
+    return best_of_us(lambda: jax.block_until_ready(fn(*args)), iters)
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -41,7 +39,7 @@ def run(smoke: bool = False) -> list[dict]:
     from repro.kernels.autotune import autotune, candidate_configs
 
     shapes = SHAPES_SMOKE if smoke else SHAPES_FULL
-    iters = 2 if smoke else 3
+    iters = 3
     rows = []
     key = jax.random.PRNGKey(0)
     for m, k, n in shapes:

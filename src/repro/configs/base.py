@@ -62,8 +62,16 @@ class ModelConfig:
 
     # --- numerics
     dtype: str = "bfloat16"
-    use_sc_gemm: bool = False        # route MLP projections through SC-GEMM
+    use_sc_gemm: bool = False        # route dense projections through SC-GEMM
     sc_bits: int = 8
+    # SC-GEMM kernel choice for every sc_dense call site (DESIGN.md §6):
+    # auto | mxu_split | pallas | pallas_tuned | ref. "auto" defers to
+    # $REPRO_SC_IMPL and then the backend/autotune-cache dispatch.
+    sc_impl: str = "auto"
+    # Flash-attention execution: "auto" uses the tuned Pallas kernel when the
+    # shape/backend qualify (TPU, causal, no window/softcap, 128-aligned),
+    # "jnp" forces the XLA formulation, "pallas_tuned" forces the kernel.
+    attn_kernel: str = "auto"
 
     # --- execution
     remat: bool = True
@@ -97,6 +105,11 @@ class ModelConfig:
         return bool(self.n_experts) and self.moe_flags[pos % len(self.moe_flags)]
 
     def validate(self) -> "ModelConfig":
+        from repro.core.sc_matmul import SC_IMPLS   # lazy: keep configs light
+        assert self.sc_impl in SC_IMPLS, (
+            f"{self.name}: unknown sc_impl {self.sc_impl!r}")
+        assert self.attn_kernel in ("auto", "jnp", "pallas_tuned"), (
+            f"{self.name}: unknown attn_kernel {self.attn_kernel!r}")
         if self.family != "ssm":
             assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
         assert self.n_layers % self.group_size == 0, (

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from .base import ModelConfig
 
-__all__ = ["Shape", "SHAPES", "input_specs", "cache_specs", "is_applicable"]
+__all__ = ["Shape", "SHAPES", "input_specs", "cache_specs", "is_applicable",
+           "sc_gemm_problems"]
 
 
 @dataclass(frozen=True)
@@ -72,6 +73,48 @@ def input_specs(cfg: ModelConfig, shape: Shape, *,
             (b, min(visual_patches, s // 4), cfg.d_model), jnp.bfloat16)
         specs["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
     return specs
+
+
+def sc_gemm_problems(cfg: ModelConfig, shape: Shape) -> list[tuple[int, int, int]]:
+    """Distinct (M, K, N) SC-GEMM problems a forward at this shape routes
+    through ``sc_dense`` when ``cfg.use_sc_gemm`` (DESIGN.md §6).
+
+    M is the token count the projection sees (one new token per sequence for
+    decode); the K/N pairs enumerate the per-layer dense projections —
+    attention QKV/O, the (gated) MLP, Mamba in/out, per-expert FFN rows, and
+    the chunked LM head. Used to pre-warm the autotune cache and by the
+    count-identity dispatch tests.
+    """
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    d = cfg.d_model
+    probs: set[tuple[int, int, int]] = set()
+    if cfg.family != "ssm":
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        probs.add((tokens, d, h * hd))          # wq
+        probs.add((tokens, d, kv * hd))         # wk, wv
+        probs.add((tokens, h * hd, d))          # wo
+    if cfg.d_ff:
+        probs.add((tokens, d, cfg.d_ff))        # w1, w3
+        probs.add((tokens, cfg.d_ff, d))        # w2
+    if cfg.n_experts and cfg.moe_d_ff:
+        from repro.models.moe import moe_capacity
+        g = min(cfg.router_group_size, tokens)
+        rows = (tokens // g) * moe_capacity(cfg)  # per-expert dispatch rows
+        probs.add((rows, d, cfg.moe_d_ff))
+        probs.add((rows, cfg.moe_d_ff, d))
+        if cfg.shared_expert_d_ff:
+            probs.add((tokens, d, cfg.shared_expert_d_ff))
+            probs.add((tokens, cfg.shared_expert_d_ff, d))
+    if cfg.ssm_state:
+        d_in = cfg.d_inner
+        proj_out = 2 * d_in + 2 * cfg.ssm_state + cfg.ssm_heads
+        probs.add((tokens, d, proj_out))        # in_proj
+        probs.add((tokens, d_in, d))            # out_proj
+    head_rows = (shape.global_batch * min(cfg.loss_chunk, shape.seq_len)
+                 if shape.kind == "train" else shape.global_batch)
+    head_out = cfg.vocab_size * max(cfg.n_codebooks, 1)
+    probs.add((head_rows, d, head_out))         # lm head (loss-chunked)
+    return sorted(probs)
 
 
 def cache_specs(cfg: ModelConfig, shape: Shape):

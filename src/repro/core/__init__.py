@@ -6,7 +6,8 @@ from .multipliers import (MULTIPLIERS, gaines, jenson, proposed_bitlevel,
                           proposed_closed_form, umul)
 from .sc_numerics import (SignMagnitude, dequantize_sign_magnitude,
                           quantize_sign_magnitude, recover_counts)
-from .sc_matmul import sc_matmul, sc_matmul_mxu_split, sc_matmul_reference
+from .sc_matmul import (resolve_impl, sc_matmul, sc_matmul_mxu_split,
+                        sc_matmul_reference)
 from .sc_layers import sc_dense
 from .error_analysis import error_vs_operand_difference, mae, table2_mae
 from . import hardware_model
@@ -18,6 +19,7 @@ __all__ = [
     "proposed_closed_form", "umul",
     "SignMagnitude", "dequantize_sign_magnitude", "quantize_sign_magnitude",
     "recover_counts",
-    "sc_matmul", "sc_matmul_mxu_split", "sc_matmul_reference", "sc_dense",
+    "resolve_impl", "sc_matmul", "sc_matmul_mxu_split",
+    "sc_matmul_reference", "sc_dense",
     "error_vs_operand_difference", "mae", "table2_mae", "hardware_model",
 ]

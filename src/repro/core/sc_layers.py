@@ -5,6 +5,17 @@ forward pass while backpropagating as if the matmul were exact (STE) — the
 standard recipe for quantization-aware training, which lets every assigned
 architecture run with the paper's numeric either for inference emulation or
 SC-aware finetuning.
+
+``impl`` selects the underlying SC-GEMM kernel and is threaded down to
+:func:`repro.core.sc_matmul.sc_matmul` after :func:`resolve_impl` (config →
+``$REPRO_SC_IMPL`` → backend/autotune cache, DESIGN.md §6). Every impl is
+count-identical, so the STE semantics are bit-identical across the whole
+dispatch space.
+
+Dtype contract: the VJP residuals are the caller's ``x`` and ``w`` in their
+*original* dtype — the float32 upcast the SC kernels need happens only inside
+the forward kernel call and is never saved, so bf16 training does not double
+its activation memory.
 """
 from __future__ import annotations
 
@@ -13,35 +24,62 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .sc_matmul import sc_matmul_mxu_split
+from .sc_matmul import resolve_impl, sc_matmul
 
-__all__ = ["sc_dense", "sc_einsum_bd_df"]
+__all__ = ["sc_dense", "sc_einsum_bd_df", "sc_proj"]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def sc_dense(x: jax.Array, w: jax.Array, bits: int = 8) -> jax.Array:
-    """``x @ w`` through SC-GEMM. ``x: (..., K)``, ``w: (K, N)``."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def sc_dense(x: jax.Array, w: jax.Array, bits: int = 8,
+             impl: str | None = None) -> jax.Array:
+    """``x @ w`` through SC-GEMM. ``x: (..., K)``, ``w: (K, N)``.
+
+    ``impl`` ∈ {None/"auto", "ref", "mxu_split", "pallas", "pallas_tuned"};
+    None defers to ``$REPRO_SC_IMPL`` and then the backend/autotune choice.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    out = sc_matmul_mxu_split(x2.astype(jnp.float32), w.astype(jnp.float32), bits=bits)
+    # Upcast only for the kernel call; the caller's dtype is restored on the
+    # way out and the residuals (saved by _sc_dense_fwd) never see float32.
+    out = sc_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), bits=bits,
+                    impl=resolve_impl(impl))
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
-def _sc_dense_fwd(x, w, bits):
-    return sc_dense(x, w, bits), (x, w)
+def _sc_dense_fwd(x, w, bits, impl):
+    # Residuals stay in the caller's dtype (bf16 stays bf16).
+    return sc_dense(x, w, bits, impl), (x, w)
 
 
-def _sc_dense_bwd(bits, res, g):
+def _sc_dense_bwd(bits, impl, res, g):
     x, w = res
-    # Straight-through: gradients of the exact matmul.
-    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
-    gw = jnp.einsum("...k,...n->kn", x, g).astype(w.dtype)
+    # Straight-through: gradients of the exact matmul, accumulated in fp32
+    # on the MXU, delivered in the parameter/activation dtypes.
+    gx = jnp.einsum("...n,kn->...k", g, w,
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x, g,
+                    preferred_element_type=jnp.float32).astype(w.dtype)
     return gx, gw
 
 
 sc_dense.defvjp(_sc_dense_fwd, _sc_dense_bwd)
 
 
-def sc_einsum_bd_df(x: jax.Array, w: jax.Array, bits: int = 8) -> jax.Array:
+def sc_einsum_bd_df(x: jax.Array, w: jax.Array, bits: int = 8,
+                    impl: str | None = None) -> jax.Array:
     """Convenience alias of :func:`sc_dense` for ``...d,df->...f`` contractions."""
-    return sc_dense(x, w, bits)
+    return sc_dense(x, w, bits, impl)
+
+
+def sc_proj(x: jax.Array, w: jax.Array, cfg) -> jax.Array:
+    """Config-driven dense projection — THE dispatch point every model matmul
+    goes through (DESIGN.md §6): exact ``x @ w``, or :func:`sc_dense` with
+    the config's ``sc_bits``/``sc_impl`` when ``cfg.use_sc_gemm``.
+
+    ``cfg`` is any object with those three fields (``configs.base
+    .ModelConfig`` in practice; duck-typed to keep core free of a configs
+    dependency).
+    """
+    if cfg.use_sc_gemm:
+        return sc_dense(x, w, cfg.sc_bits, cfg.sc_impl)
+    return x @ w

@@ -27,6 +27,7 @@ Three implementations, all bit-identical:
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +40,17 @@ __all__ = [
     "sc_matmul_mxu_split",
     "sc_matmul",
     "sc_residual_term",
+    "resolve_impl",
+    "SC_IMPLS",
+    "IMPL_ENV",
 ]
+
+#: Accepted ``impl`` names ("ref" and "reference" are synonyms).
+SC_IMPLS = ("auto", "ref", "reference", "mxu_split", "pallas", "pallas_tuned")
+
+#: Environment override consulted by :func:`resolve_impl` when the config
+#: leaves the choice open (``"auto"``/None).
+IMPL_ENV = "REPRO_SC_IMPL"
 
 
 def _signed_counts_block(sx, mx, sy, my, bits: int) -> jax.Array:
@@ -151,22 +162,49 @@ def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
     return counts * (nn * qa.scale * qb.scale)
 
 
+def resolve_impl(impl: str | None = None) -> str:
+    """Resolve an SC-GEMM implementation request (DESIGN.md §6).
+
+    Resolution order: an explicit config value wins; ``"auto"``/None defers
+    to the ``$REPRO_SC_IMPL`` environment override; absent both, the result
+    stays ``"auto"`` and :func:`sc_matmul` consults the backend/autotune
+    cache per shape. Unknown names fail loudly here, not deep in a trace.
+    """
+    if impl is None:
+        impl = "auto"
+    if impl not in SC_IMPLS:
+        raise ValueError(
+            f"unknown SC impl {impl!r}; expected one of {SC_IMPLS}")
+    if impl != "auto":
+        return impl
+    env = os.environ.get(IMPL_ENV)
+    if env:
+        if env not in SC_IMPLS:
+            raise ValueError(
+                f"${IMPL_ENV}={env!r} is not a valid SC impl; "
+                f"expected one of {SC_IMPLS}")
+        return env
+    return "auto"
+
+
 def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
               impl: str = "mxu_split") -> jax.Array:
     """Dispatching entry point.
 
-    ``impl`` ∈ {"reference", "mxu_split", "pallas", "pallas_tuned", "auto"}.
-    "pallas_tuned" runs the Pallas kernel with the autotuned block
+    ``impl`` ∈ {"ref"/"reference", "mxu_split", "pallas", "pallas_tuned",
+    "auto"}. "pallas_tuned" runs the Pallas kernel with the autotuned block
     configuration for this problem shape (tuning on first use, then served
-    from the on-disk cache); "auto" picks the implementation for the active
-    backend via :func:`repro.kernels.autotune.choose_impl`.
+    from the on-disk cache); "auto" resolves per DESIGN.md §6 — the
+    ``$REPRO_SC_IMPL`` override if set, else the backend-level choice from
+    :func:`repro.kernels.autotune.choose_impl`. All impls are count-identical.
     """
+    impl = resolve_impl(impl)
     if impl == "auto":
         from repro.kernels.autotune import choose_impl
         m, k = a.shape
         _, n = b.shape
         impl = choose_impl(m, k, n, bits=bits)
-    if impl == "reference":
+    if impl in ("ref", "reference"):
         return sc_matmul_reference(a, b, bits=bits)
     if impl == "mxu_split":
         return sc_matmul_mxu_split(a, b, bits=bits)

@@ -1,17 +1,31 @@
-"""Autotuner for the SC-GEMM Pallas kernel: per-shape (bm, bn, bk, chunk)
-sweep with a persistent on-disk cache.
+"""Autotuner for the Pallas kernels: per-shape configuration sweeps with a
+persistent on-disk cache, shared by all three kernel families.
 
-The kernel's throughput depends on the block configuration — MXU tile sizes
-(bm, bn), the K-block bk held in VMEM, and the residual's lane-parallel chunk
-width (DESIGN.md §2.3). The best point varies with the problem shape, so the
-tuner measures a pruned candidate grid once per (backend, M, K, N, bits) key
-and persists the winner as JSON. Subsequent calls — including across
-processes — are served from the cache.
+Tuned subspaces (DESIGN.md §2.3, §6):
+
+* SC-GEMM (:class:`KernelConfig`) — MXU tile sizes (bm, bn), the K-block bk
+  held in VMEM, and the residual's lane-parallel chunk width.
+* bit-parallel stream multiply (:class:`StreamConfig`) — rows-per-call group
+  width of ``sc_bitops.sc_stream_mul_pallas`` (how many 128-lane rows each
+  grid step processes, which also sets the flat-input padding group).
+* flash attention (:class:`FlashConfig`) — (bq, bk) block sizes of
+  ``kernels.flash_attention``.
+
+The best point varies with problem shape, backend, **and interpret mode** —
+interpret-mode timings (Python-loop execution on CPU) say nothing about
+compiled Mosaic throughput, so the cache key carries all three. Winners are
+persisted as JSON once per key and served from the cache afterwards,
+including across processes.
 
 Entry points:
 
-* :func:`get_or_tune` — cached lookup + sweep; used by
-  ``ops.sc_matmul_pallas(..., tune=True)``.
+* :func:`get_or_tune` / :func:`get_or_tune_stream` / :func:`get_or_tune_flash`
+  — cached lookup + sweep; used by the ``ops.py`` wrappers' ``tune=True``
+  paths. Safe to reach from inside ``jax.jit`` tracing: a cache hit resolves
+  from shape alone, and a miss sweeps *synthetic* operands of the same shape
+  in a worker thread (JAX trace state is thread-local, so the sweep runs
+  outside the caller's trace — timing traced abstract values is meaningless,
+  and the sweep never touches the caller's tracers).
 * :func:`choose_impl` — backend-level dispatch behind
   ``core.sc_matmul(..., impl="auto")``.
 * :class:`AutotuneCache` — the JSON cache (default location
@@ -19,36 +33,53 @@ Entry points:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
 import time
 from dataclasses import asdict, dataclass
 from pathlib import Path
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "KernelConfig",
+    "StreamConfig",
+    "FlashConfig",
     "AutotuneCache",
     "candidate_configs",
+    "candidate_stream_configs",
+    "candidate_flash_configs",
     "autotune",
     "get_or_tune",
+    "get_or_tune_stream",
+    "get_or_tune_flash",
     "choose_impl",
+    "best_of_us",
     "default_cache_path",
 ]
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-CACHE_VERSION = 1
+#: v2 adds the interpret flag to every key. v1 entries are *invalidated* on
+#: load (not migrated): a v1 timing's execution mode is unrecorded, so an
+#: interpret-mode CPU sweep could silently poison compiled-run dispatch.
+CACHE_VERSION = 2
 
 #: VMEM budget used to prune candidates; conservative fraction of ~16 MiB.
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
 
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
 @dataclass(frozen=True)
 class KernelConfig:
-    """One point in the kernel's tuning space."""
+    """One point in the SC-GEMM kernel's tuning space."""
     bm: int = 128
     bn: int = 128
     bk: int = 512
@@ -67,6 +98,32 @@ class KernelConfig:
                 self.bk % self.chunk == 0 and self.chunk > 0)
 
 
+@dataclass(frozen=True)
+class StreamConfig:
+    """Tuning point for ``sc_bitops.sc_stream_mul_pallas``: how many 128-lane
+    rows one grid step processes (= the flat-input padding group width)."""
+    block_rows: int = 8
+
+    def is_valid(self) -> bool:
+        return self.block_rows > 0
+
+
+@dataclass(frozen=True)
+class FlashConfig:
+    """Tuning point for ``kernels.flash_attention``: (bq, bk) block sizes."""
+    bq: int = 256
+    bk: int = 512
+
+    def vmem_bytes(self, d: int = 256) -> int:
+        """Working set for head dim ``d``: q + k + v + out + acc tiles plus
+        the m/l lane scratch (callers pass the real head dim when pruning)."""
+        return 4 * (2 * self.bq * d + 2 * self.bk * d + self.bq * d
+                    + 2 * self.bq * 128)
+
+    def is_valid(self) -> bool:
+        return self.bq % 128 == 0 and self.bk % 128 == 0
+
+
 def default_cache_path() -> Path:
     env = os.environ.get(CACHE_ENV)
     if env:
@@ -75,8 +132,24 @@ def default_cache_path() -> Path:
     return base / "repro" / "sc_gemm_autotune.json"
 
 
+def _mode(interpret: bool | None, backend: str) -> str:
+    """Key-segment for the execution mode. An omitted ``interpret`` is
+    inferred from the *key's* backend (not the live process), so inspecting
+    or pre-seeding another backend's entries from a CPU process builds the
+    keys that backend's processes actually use. Library call paths always
+    pass the resolved flag (``ops.default_interpret`` has the same rule)."""
+    if interpret is None:
+        interpret = backend != "tpu"
+    return "interp" if interpret else "compiled"
+
+
 class AutotuneCache:
-    """Persistent shape -> KernelConfig map, stored as one JSON document."""
+    """Persistent key -> config map, stored as one JSON document.
+
+    Keys are built by the ``key*`` staticmethods and always carry the op
+    family, backend, and interpret mode, so interpret-mode sweeps can never
+    serve compiled runs (or vice versa) on the same machine.
+    """
 
     def __init__(self, path: str | os.PathLike | None = None):
         self.path = Path(path) if path is not None else default_cache_path()
@@ -84,9 +157,32 @@ class AutotuneCache:
         self._load()
 
     @staticmethod
-    def key(m: int, k: int, n: int, bits: int, backend: str | None = None) -> str:
+    def key(m: int, k: int, n: int, bits: int, backend: str | None = None,
+            interpret: bool | None = None) -> str:
         backend = backend or jax.default_backend()
-        return f"{backend}:m{m}:k{k}:n{n}:b{bits}"
+        return (f"sc_gemm:{backend}:{_mode(interpret, backend)}"
+                f":m{m}:k{k}:n{n}:b{bits}")
+
+    @staticmethod
+    def stream_key(size: int, bits: int, backend: str | None = None,
+                   interpret: bool | None = None) -> str:
+        """``size`` is the flat element count (padding depends on the
+        candidate's group width, so the key carries the unpadded size)."""
+        backend = backend or jax.default_backend()
+        return f"sc_stream:{backend}:{_mode(interpret, backend)}:s{size}:b{bits}"
+
+    @staticmethod
+    def flash_key(b: int, h: int, kv: int, sq: int, skv: int, d: int,
+                  causal: bool, backend: str | None = None,
+                  interpret: bool | None = None,
+                  dtype: str = "float32") -> str:
+        """Unlike SC-GEMM (always quantized from fp32 inside the kernel
+        call), flash operands keep their real dtype, which changes per-tile
+        memory traffic — so the key carries it."""
+        backend = backend or jax.default_backend()
+        c = "causal" if causal else "full"
+        return (f"flash:{backend}:{_mode(interpret, backend)}:b{b}:h{h}:kv{kv}"
+                f":sq{sq}:skv{skv}:d{d}:{dtype}:{c}")
 
     def _load(self) -> None:
         try:
@@ -95,16 +191,21 @@ class AutotuneCache:
             return
         if doc.get("version") == CACHE_VERSION:
             self._entries = doc.get("entries", {})
+        # version 1 (or anything unknown): discard — v1 keys carried no
+        # interpret flag, so the recorded timings' execution mode is unknown
+        # and they must not seed either mode's dispatch.
 
-    def get(self, key: str) -> KernelConfig | None:
+    def get(self, key: str, cls: type = KernelConfig):
         ent = self._entries.get(key)
         if ent is None:
             return None
-        cfg = KernelConfig(**{f: ent[f] for f in ("bm", "bn", "bk", "chunk")})
+        names = [f.name for f in dataclasses.fields(cls)]
+        if any(f not in ent for f in names):
+            return None
+        cfg = cls(**{f: ent[f] for f in names})
         return cfg if cfg.is_valid() else None
 
-    def put(self, key: str, cfg: KernelConfig, *,
-            elapsed_us: float | None = None) -> None:
+    def put(self, key: str, cfg, *, elapsed_us: float | None = None) -> None:
         ent = asdict(cfg)
         ent["tuned_at"] = time.time()
         if elapsed_us is not None:
@@ -157,10 +258,12 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+# ------------------------------------------------------------ candidate grids
+
 def candidate_configs(m: int, k: int, n: int, *,
                       vmem_budget: int = VMEM_BUDGET_BYTES
                       ) -> list[KernelConfig]:
-    """Pruned tuning grid for an (M, K, N) problem.
+    """Pruned SC-GEMM tuning grid for an (M, K, N) problem.
 
     Blocks larger than the (128-aligned) problem extent only add padding
     work, so they are dropped; every candidate satisfies the VMEM budget and
@@ -186,15 +289,41 @@ def candidate_configs(m: int, k: int, n: int, *,
     return out
 
 
-def _time_config(a, b, bits: int, cfg: KernelConfig, iters: int) -> float:
-    """Median-free best-of-``iters`` wall time (µs) of one tuned call."""
-    from .ops import sc_matmul_pallas
+def candidate_stream_configs(size: int) -> list[StreamConfig]:
+    """Group widths for the stream-multiply kernel. Groups wider than the
+    (128-element-row) problem only pad, so they are capped near the extent."""
+    rows = max(_round_up(size, 128) // 128, 1)
+    return [StreamConfig(block_rows=w)
+            for w in (1, 2, 4, 8, 16, 32) if w <= rows]
 
-    def call():
-        return jax.block_until_ready(
-            sc_matmul_pallas(a, b, bits=bits, bm=cfg.bm, bn=cfg.bn,
-                             bk=cfg.bk, chunk=cfg.chunk))
 
+def candidate_flash_configs(sq: int, skv: int, d: int, *,
+                            vmem_budget: int = VMEM_BUDGET_BYTES
+                            ) -> list[FlashConfig]:
+    """(bq, bk) grid for the flash kernel: blocks must tile the (pre-padded)
+    sequence extents exactly and fit the VMEM budget."""
+    out = []
+    for bq in (128, 256, 512):
+        if sq % bq != 0:
+            continue
+        for bk in (128, 256, 512):
+            if skv % bk != 0:
+                continue
+            cfg = FlashConfig(bq=bq, bk=bk)
+            if cfg.is_valid() and cfg.vmem_bytes(d) <= vmem_budget:
+                out.append(cfg)
+    return out
+
+
+# -------------------------------------------------------------------- sweeps
+
+def best_of_us(call: Callable[[], object], iters: int) -> float:
+    """Best-of-``iters`` wall time (µs) of ``call`` after one warmup.
+
+    Best-of, not mean: scheduler noise on shared machines only ever adds
+    time. Shared by every tuner sweep and by ``benchmarks/sc_gemm.py``, so
+    bench records and tuner decisions use one estimator.
+    """
     call()  # compile
     best = float("inf")
     for _ in range(max(iters, 1)):
@@ -204,11 +333,81 @@ def _time_config(a, b, bits: int, cfg: KernelConfig, iters: int) -> float:
     return best * 1e6
 
 
+def _sweep(cands: Sequence, time_one: Callable[[object], float],
+           what: str):
+    if not cands:
+        raise ValueError(f"no tuning candidates for {what}")
+    best_cfg, best_us = None, float("inf")
+    for cfg in cands:
+        us = time_one(cfg)
+        if us < best_us:
+            best_cfg, best_us = cfg, us
+    return best_cfg, best_us
+
+
+def _require_concrete(name: str, *arrays) -> None:
+    if any(_is_tracer(a) for a in arrays):
+        raise TypeError(
+            f"{name}() needs concrete arrays: the sweep measures wall-clock "
+            "time, which is meaningless for traced abstract values. Call it "
+            "outside jax.jit, or go through the get_or_tune* entry points, "
+            "which fall back to a synthetic-data sweep at trace time.")
+
+
+def _sweep_outside_trace(fn: Callable[[], tuple]):
+    """Run a tuning sweep from inside ``jax.jit`` tracing.
+
+    JAX's trace context is thread-local, so a fresh worker thread sees no
+    active trace: the sweep's (concrete, synthetic) operands execute eagerly
+    instead of leaking into the caller's jaxpr — and the Pallas kernel
+    tracing inside the timed calls is not corrupted by the caller's dynamic
+    trace (``ensure_compile_time_eval`` is not enough for that on jax 0.4).
+    """
+    import concurrent.futures
+
+    with concurrent.futures.ThreadPoolExecutor(max_workers=1) as ex:
+        return ex.submit(fn).result()
+
+
+#: Caps on the *synthetic* trace-time sweep operands. Under jit the logical
+#: shape is the global (unsharded) one — a production train step can imply a
+#: multi-million-row M — but block-config ranking is tile-local, so timing a
+#: bounded slab ranks candidates the same while never materializing
+#: global-batch-sized eager arrays at trace time. Candidate pruning still
+#: uses the true shape; only the timed operands are capped.
+SYNTH_M_CAP = 2048
+SYNTH_KN_CAP = 8192
+
+
+def _synth_normal(shape, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _synth_mags(shape, bits: int, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 1 << bits, size=shape), jnp.int32)
+
+
+def _time_config(a, b, bits: int, cfg: KernelConfig, iters: int,
+                 interpret: bool | None) -> float:
+    from .ops import sc_matmul_pallas
+
+    def call():
+        return jax.block_until_ready(
+            sc_matmul_pallas(a, b, bits=bits, bm=cfg.bm, bn=cfg.bn,
+                             bk=cfg.bk, chunk=cfg.chunk, interpret=interpret))
+
+    return best_of_us(call, iters)
+
+
 def autotune(a, b, *, bits: int = 8,
              candidates: Sequence[KernelConfig] | None = None,
              iters: int = 3,
-             max_candidates: int | None = None) -> tuple[KernelConfig, float]:
-    """Sweep the candidate grid on live data; return (best config, best µs)."""
+             max_candidates: int | None = None,
+             interpret: bool | None = None) -> tuple[KernelConfig, float]:
+    """Sweep the SC-GEMM grid on live data; return (best config, best µs)."""
+    _require_concrete("autotune", a, b)
     m, k = a.shape
     _, n = b.shape
     cands: Iterable[KernelConfig] = (candidates if candidates is not None
@@ -216,29 +415,154 @@ def autotune(a, b, *, bits: int = 8,
     cands = list(cands)
     if max_candidates is not None:
         cands = cands[:max_candidates]
-    if not cands:
-        raise ValueError(f"no tuning candidates for shape ({m},{k})x({k},{n})")
-    best_cfg, best_us = None, float("inf")
-    for cfg in cands:
-        us = _time_config(a, b, bits, cfg, iters)
-        if us < best_us:
-            best_cfg, best_us = cfg, us
-    return best_cfg, best_us
+    return _sweep(cands,
+                  lambda cfg: _time_config(a, b, bits, cfg, iters, interpret),
+                  f"shape ({m},{k})x({k},{n})")
 
 
 def get_or_tune(a, b, *, bits: int = 8,
                 cache: AutotuneCache | None = None,
                 candidates: Sequence[KernelConfig] | None = None,
-                iters: int = 3) -> KernelConfig:
-    """Cached per-shape best config; runs the sweep on a cache miss."""
+                iters: int = 3,
+                interpret: bool | None = None) -> KernelConfig:
+    """Cached per-shape best SC-GEMM config; runs the sweep on a cache miss.
+
+    Trace-safe: a cache hit needs only shapes; a miss under tracing sweeps
+    synthetic operands (the tuned block configuration depends on the shape,
+    not the values) whose extents are capped at (SYNTH_M_CAP, SYNTH_KN_CAP)
+    — candidates are still pruned against the true shape, but the timed slab
+    stays bounded even when the traced global shape is production-sized.
+    """
     m, k = a.shape
     _, n = b.shape
     cache = cache if cache is not None else _default_cache()
-    key = cache.key(m, k, n, bits)
-    hit = cache.get(key)
+    key = cache.key(m, k, n, bits, interpret=interpret)
+    hit = cache.get(key, KernelConfig)
     if hit is not None:
         return hit
-    cfg, us = autotune(a, b, bits=bits, candidates=candidates, iters=iters)
+    if _is_tracer(a) or _is_tracer(b):
+        cands = (list(candidates) if candidates is not None
+                 else candidate_configs(m, k, n))
+        ms = min(m, SYNTH_M_CAP)
+        ks, ns = min(k, SYNTH_KN_CAP), min(n, SYNTH_KN_CAP)
+        cfg, us = _sweep_outside_trace(lambda: autotune(
+            _synth_normal((ms, ks), seed=m * 7919 + k),
+            _synth_normal((ks, ns), seed=k * 7919 + n),
+            bits=bits, candidates=cands, iters=iters,
+            interpret=interpret))
+    else:
+        cfg, us = autotune(a, b, bits=bits, candidates=candidates,
+                           iters=iters, interpret=interpret)
+    cache.put(key, cfg, elapsed_us=us)
+    return cfg
+
+
+# ------------------------------------------------------- stream-kernel sweep
+
+def _time_stream_config(x, y, bits: int, cfg: StreamConfig, iters: int,
+                        interpret: bool | None) -> float:
+    from .ops import sc_stream_mul
+
+    def call():
+        return jax.block_until_ready(
+            sc_stream_mul(x, y, bits=bits, block_rows=cfg.block_rows,
+                          interpret=interpret))
+
+    return best_of_us(call, iters)
+
+
+def get_or_tune_stream(x, y, *, bits: int = 8,
+                       cache: AutotuneCache | None = None,
+                       candidates: Sequence[StreamConfig] | None = None,
+                       iters: int = 3,
+                       interpret: bool | None = None) -> StreamConfig:
+    """Cached best rows-per-call group width for ``ops.sc_stream_mul``."""
+    size = int(np.prod(x.shape)) if x.shape else 1
+    cache = cache if cache is not None else _default_cache()
+    key = cache.stream_key(size, bits, interpret=interpret)
+    hit = cache.get(key, StreamConfig)
+    if hit is not None:
+        return hit
+    cands = (list(candidates) if candidates is not None
+             else candidate_stream_configs(size))
+    if _is_tracer(x) or _is_tracer(y):
+        # synthetic slab capped like the GEMM sweep: group-width ranking is
+        # rows-local, so a bounded flat size ranks candidates the same
+        slab = (min(size, SYNTH_M_CAP * 128),)
+        xs = _synth_mags(slab, bits, seed=size)
+        ys = _synth_mags(slab, bits, seed=size + 1)
+        cfg, us = _sweep_outside_trace(lambda: _sweep(
+            cands,
+            lambda c: _time_stream_config(xs, ys, bits, c, iters, interpret),
+            f"stream size {size}"))
+    else:
+        cfg, us = _sweep(
+            cands,
+            lambda c: _time_stream_config(x, y, bits, c, iters, interpret),
+            f"stream size {size}")
+    cache.put(key, cfg, elapsed_us=us)
+    return cfg
+
+
+# -------------------------------------------------------- flash-kernel sweep
+
+def _time_flash_config(q, k, v, causal: bool, cfg: FlashConfig, iters: int,
+                       interpret: bool | None) -> float:
+    from .flash_attention import flash_attention_pallas
+    from .ops import default_interpret
+
+    interp = default_interpret() if interpret is None else interpret
+
+    def call():
+        return jax.block_until_ready(
+            flash_attention_pallas(q, k, v, causal=causal, bq=cfg.bq,
+                                   bk=cfg.bk, interpret=interp))
+
+    return best_of_us(call, iters)
+
+
+def get_or_tune_flash(q, k, v, *, causal: bool = True,
+                      cache: AutotuneCache | None = None,
+                      candidates: Sequence[FlashConfig] | None = None,
+                      iters: int = 3,
+                      interpret: bool | None = None) -> FlashConfig:
+    """Cached best (bq, bk) for the flash kernel at this problem shape.
+
+    ``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)`` — the kernel layout.
+    """
+    b, h, sq, d = q.shape
+    _, kv, skv, _ = k.shape
+    dtype = jnp.dtype(q.dtype).name
+    cache = cache if cache is not None else _default_cache()
+    key = cache.flash_key(b, h, kv, sq, skv, d, causal, interpret=interpret,
+                          dtype=dtype)
+    hit = cache.get(key, FlashConfig)
+    if hit is not None:
+        return hit
+    cands = (list(candidates) if candidates is not None
+             else candidate_flash_configs(sq, skv, d))
+    what = f"flash ({b},{h},{sq},{d})x(kv={kv},{skv})"
+    if any(_is_tracer(t) for t in (q, k, v)):
+        # (bq, bk) ranking depends on (sq, skv, d), which must be exact for
+        # divisibility; batch/head extents only scale the grid, so cap them
+        # to bound the synthetic slab at trace time.
+        g = max(h // max(kv, 1), 1)
+        kv_c = min(kv, 2)
+        b_c, h_c = min(b, 2), g * kv_c
+        # synthetic operands keep the caller's dtype: bf16 halves per-tile
+        # memory traffic, so the (bq, bk) ranking is dtype-dependent
+        qs = _synth_normal((b_c, h_c, sq, d), seed=sq * 31 + d).astype(q.dtype)
+        ks = _synth_normal((b_c, kv_c, skv, d), seed=skv * 31 + d).astype(q.dtype)
+        vs = _synth_normal((b_c, kv_c, skv, d), seed=skv * 37 + d).astype(q.dtype)
+        cfg, us = _sweep_outside_trace(lambda: _sweep(
+            cands,
+            lambda c: _time_flash_config(qs, ks, vs, causal, c, iters,
+                                         interpret), what))
+    else:
+        cfg, us = _sweep(
+            cands,
+            lambda c: _time_flash_config(q, k, v, causal, c, iters,
+                                         interpret), what)
     cache.put(key, cfg, elapsed_us=us)
     return cfg
 

@@ -4,6 +4,11 @@ dequantization, and CPU-interpret fallback.
 On non-TPU backends (this container) kernels run with ``interpret=True``,
 which executes the kernel body in Python on CPU — bit-identical semantics,
 used by the test suite. On TPU the same code lowers to Mosaic.
+
+Every wrapper's ``tune=True`` path resolves its block configuration through
+:mod:`repro.kernels.autotune` (sweeping on the first call for the problem
+shape, then serving the persisted winner). The cache key includes the
+interpret flag, so interpret-mode sweeps never serve compiled runs.
 """
 from __future__ import annotations
 
@@ -17,7 +22,8 @@ from repro.core.tcu import stream_length
 from .sc_matmul import sc_matmul_counts_pallas
 from .sc_bitops import sc_stream_mul_pallas
 
-__all__ = ["sc_matmul_pallas", "sc_stream_mul", "default_interpret"]
+__all__ = ["sc_matmul_pallas", "sc_stream_mul", "flash_attention_tuned",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -62,29 +68,67 @@ def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
     With ``tune=True`` the block configuration (bm, bn, bk, chunk) is resolved
     through the :mod:`repro.kernels.autotune` cache (sweeping candidates on
     the first call for this problem shape) and the explicit block arguments
-    are ignored.
+    are ignored. Safe inside ``jax.jit``: resolution happens at trace time —
+    a cache hit from shape alone, a miss via a synthetic-data sweep.
     """
     if interpret is None:
         interpret = default_interpret()
     if tune:
         from .autotune import get_or_tune
-        cfg = get_or_tune(a, b, bits=bits)
+        cfg = get_or_tune(a, b, bits=bits, interpret=interpret)
         bm, bn, bk, chunk = cfg.bm, cfg.bn, cfg.bk, cfg.chunk
     return _sc_matmul_pallas_jit(a, b, bits=bits, bm=bm, bn=bn, bk=bk,
                                  chunk=chunk, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def sc_stream_mul(x: jax.Array, y: jax.Array, *, bits: int = 8,
-                  interpret: bool | None = None) -> jax.Array:
-    """Elementwise bit-parallel stochastic multiply of flat int32 arrays."""
-    if interpret is None:
-        interpret = default_interpret()
+@functools.partial(jax.jit, static_argnames=("bits", "interpret",
+                                             "block_rows"))
+def _sc_stream_mul_jit(x: jax.Array, y: jax.Array, *, bits: int,
+                       interpret: bool, block_rows: int) -> jax.Array:
     orig = x.shape
     flat_x = x.reshape(-1)
     flat_y = y.reshape(-1)
-    xg = _pad_to(flat_x, 128 * 8, 0).reshape(-1, 128)
-    yg = _pad_to(flat_y, 128 * 8, 0).reshape(-1, 128)
+    group = 128 * block_rows
+    xg = _pad_to(flat_x, group, 0).reshape(-1, 128)
+    yg = _pad_to(flat_y, group, 0).reshape(-1, 128)
     out = sc_stream_mul_pallas(xg.astype(jnp.int32), yg.astype(jnp.int32),
-                               bits=bits, interpret=interpret)
+                               bits=bits, block_rows=block_rows,
+                               interpret=interpret)
     return out.reshape(-1)[: flat_x.shape[0]].reshape(orig)
+
+
+def sc_stream_mul(x: jax.Array, y: jax.Array, *, bits: int = 8,
+                  block_rows: int = 8, interpret: bool | None = None,
+                  tune: bool = False) -> jax.Array:
+    """Elementwise bit-parallel stochastic multiply of flat int32 arrays.
+
+    ``block_rows`` is the kernel's rows-per-call group width (also the flat
+    padding group, ``128·block_rows`` elements); ``tune=True`` resolves it
+    through the autotune cache instead.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if tune:
+        from .autotune import get_or_tune_stream
+        cfg = get_or_tune_stream(x, y, bits=bits, interpret=interpret)
+        block_rows = cfg.block_rows
+    return _sc_stream_mul_jit(x, y, bits=bits, interpret=interpret,
+                              block_rows=block_rows)
+
+
+def flash_attention_tuned(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True,
+                          interpret: bool | None = None) -> jax.Array:
+    """Flash-attention Pallas kernel with autotuned (bq, bk) block sizes.
+
+    Kernel layout: ``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)``. Sq/Skv
+    must be multiples of 128 and D a multiple of 128 (the model-layer caller
+    checks eligibility and falls back to the jnp formulation otherwise).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from .autotune import get_or_tune_flash
+    from .flash_attention import flash_attention_pallas
+    cfg = get_or_tune_flash(q, k, v, causal=causal, interpret=interpret)
+    return flash_attention_pallas(q, k, v, causal=causal, bq=cfg.bq,
+                                  bk=cfg.bk, interpret=interpret)

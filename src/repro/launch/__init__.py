@@ -1,1 +1,32 @@
 """Launchers: mesh construction, multi-pod dry-run, train and serve drivers."""
+from __future__ import annotations
+
+__all__ = ["apply_numeric_overrides", "numeric_overrides"]
+
+
+def numeric_overrides(*, sc_gemm: bool = False,
+                      sc_impl: str | None = None) -> dict:
+    """--sc-gemm/--sc-impl flags -> ModelConfig override fields. Used by
+    :func:`apply_numeric_overrides` (train/serve) and by dryrun, whose
+    run_cell takes an overrides dict for its hillclimb-variant interface."""
+    overrides = {}
+    if sc_gemm:
+        overrides["use_sc_gemm"] = True
+    if sc_impl is not None:
+        overrides["sc_impl"] = sc_impl
+    return overrides
+
+
+def apply_numeric_overrides(cfg, *, sc_gemm: bool = False,
+                            sc_impl: str | None = None):
+    """Shared --sc-gemm/--sc-impl CLI handling for the launch drivers.
+
+    Returns ``cfg`` with the SC-numeric fields replaced and re-validated (so
+    an invalid combination fails identically in train, serve, and dryrun —
+    dryrun's run_cell validates after applying its overrides dict).
+    """
+    import dataclasses
+    overrides = numeric_overrides(sc_gemm=sc_gemm, sc_impl=sc_impl)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides).validate()
+    return cfg

@@ -57,7 +57,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     import dataclasses
     cfg = ARCHS[arch]
     if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
+        # validate like train/serve: a combination the real drivers would
+        # refuse must not silently produce dry-run records
+        cfg = dataclasses.replace(cfg, **overrides).validate()
     shape = SHAPES[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -131,13 +133,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main() -> None:
+    from repro.core.sc_matmul import SC_IMPLS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
     ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--sc-gemm", action="store_true",
+                    help="lower/compile with SC-GEMM dense projections")
+    ap.add_argument("--sc-impl", choices=SC_IMPLS, default=None,
+                    help="SC-GEMM kernel (overrides the config's sc_impl)")
     args = ap.parse_args()
+
+    from repro.launch import numeric_overrides
+    overrides = numeric_overrides(sc_gemm=args.sc_gemm, sc_impl=args.sc_impl)
 
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -153,7 +164,8 @@ def main() -> None:
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
                 path = out_dir / f"{tag}.json"
                 try:
-                    rec = run_cell(arch, shape, multi)
+                    rec = run_cell(arch, shape, multi,
+                                   overrides=overrides or None)
                 except Exception as e:  # noqa: BLE001 - record and continue
                     rec = {"arch": arch, "shape": shape,
                            "mesh": "pod2x16x16" if multi else "pod16x16",

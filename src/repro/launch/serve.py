@@ -48,6 +48,9 @@ def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
 
 
 def main() -> None:
+    from repro.core.sc_matmul import SC_IMPLS
+    from repro.launch import apply_numeric_overrides
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -55,11 +58,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sc-gemm", action="store_true",
+                    help="serve through the SC-GEMM numeric (inference "
+                         "emulation of the paper's multiplier)")
+    ap.add_argument("--sc-impl", choices=SC_IMPLS, default=None,
+                    help="SC-GEMM kernel (overrides the config's sc_impl)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced(dtype="float32")
+    cfg = apply_numeric_overrides(cfg, sc_gemm=args.sc_gemm,
+                                  sc_impl=args.sc_impl)
     m = bind(cfg)
     params = m.init_params(jax.random.PRNGKey(0))
     shape = ((args.batch, args.prompt_len, cfg.n_codebooks)

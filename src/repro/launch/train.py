@@ -92,6 +92,9 @@ def train(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str | None,
 
 
 def main() -> None:
+    from repro.core.sc_matmul import SC_IMPLS
+    from repro.launch import apply_numeric_overrides
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
     ap.add_argument("--reduced", action="store_true",
@@ -102,11 +105,19 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--sc-gemm", action="store_true",
+                    help="run dense projections through the SC-GEMM numeric "
+                         "(STE training)")
+    ap.add_argument("--sc-impl", choices=SC_IMPLS, default=None,
+                    help="SC-GEMM kernel (overrides the config's sc_impl; "
+                         "'auto' = $REPRO_SC_IMPL, then autotune dispatch)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced(dtype="float32")
+    cfg = apply_numeric_overrides(cfg, sc_gemm=args.sc_gemm,
+                                  sc_impl=args.sc_impl)
     out = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                 ckpt_dir=args.ckpt_dir, lr=args.lr,
                 compress_grads=args.compress_grads)

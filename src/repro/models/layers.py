@@ -11,6 +11,7 @@ M-RoPE (qwen2-vl), QKV bias (qwen2).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -83,13 +84,71 @@ class _FlashCarry(NamedTuple):
     o: jax.Array      # running output   (B, KV, G, Q, D)
 
 
+def _flash_kernel_eligible(sq: int, skv: int, d: int, *, causal: bool,
+                           window: int | None,
+                           logit_softcap: float | None,
+                           bf16_probs: bool) -> bool:
+    """Shapes/features the fused Pallas flash kernel can serve: plain causal
+    self-attention on MXU-aligned extents. ``bf16_probs`` disqualifies — the
+    kernel keeps fp32 probs, and silently mixing prob precisions across a
+    model's layers would change training numerics."""
+    return (causal and window is None and logit_softcap is None
+            and not bf16_probs
+            and sq == skv and sq % 128 == 0 and d % 128 == 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_kernel_call(q: jax.Array, k: jax.Array, v: jax.Array,
+                       q_block: int, kv_block: int,
+                       skip_masked_blocks: bool) -> jax.Array:
+    """Tuned Pallas flash forward in layer layout (B, S, H, D).
+
+    The kernel is forward-only (no backward Mosaic kernel yet), so gradients
+    recompute through the jnp online-softmax formulation below — the same
+    math, so this is a true VJP, not an STE. ``q_block/kv_block`` and
+    ``skip_masked_blocks`` configure that recompute (the triangular-skip
+    schedule matters in the backward too).
+    """
+    from repro.kernels.ops import flash_attention_tuned
+    out = flash_attention_tuned(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), causal=True)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _flash_kernel_call_fwd(q, k, v, q_block, kv_block, skip_masked_blocks):
+    return (_flash_kernel_call(q, k, v, q_block, kv_block,
+                               skip_masked_blocks), (q, k, v))
+
+
+def _flash_kernel_call_bwd(q_block, kv_block, skip_masked_blocks, res, g):
+    q, k, v = res
+    b, s = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def ref(q, k, v):
+        return flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                               causal=True, q_block=q_block,
+                               kv_block=kv_block,
+                               skip_masked_blocks=skip_masked_blocks,
+                               kernel_impl="jnp")
+
+    _, vjp = jax.vjp(ref, q, k, v)
+    return vjp(g)
+
+
+_flash_kernel_call.defvjp(_flash_kernel_call_fwd, _flash_kernel_call_bwd)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     q_positions: jax.Array, kv_positions: jax.Array,
                     causal: bool = True, window: int | None = None,
                     logit_softcap: float | None = None,
                     q_block: int = 512, kv_block: int = 1024,
                     skip_masked_blocks: bool = False,
-                    bf16_probs: bool = False) -> jax.Array:
+                    bf16_probs: bool = False,
+                    kernel_impl: str = "auto",
+                    canonical_positions: bool = False) -> jax.Array:
     """Blocked online-softmax attention with grouped (GQA) einsums.
 
     ``q: (B, Sq, H, D)``; ``k, v: (B, Skv, KV, D)`` with ``H % KV == 0``.
@@ -100,9 +159,34 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bound derived from the causal structure — the §Perf optimization that
     removes the ~2x full-sweep FLOP waste for causal training shapes (valid
     for the canonical 0..S-1 position layout).
+
+    ``kernel_impl`` dispatches the fused Pallas kernel (DESIGN.md §6):
+    "auto" uses it on TPU when the shape/features qualify (plain causal
+    self-attention, 128-aligned S and D, fp32 probs); "pallas_tuned" uses it
+    on every eligible call regardless of backend (interpret mode off TPU —
+    used by tests) and falls back to jnp on ineligible ones (windows,
+    softcap, ragged extents); "jnp" forces the XLA formulation below. The
+    kernel's (bq, bk) blocks resolve through the autotune cache.
+
+    The kernel masks with a built-in 0..S-1 causal mask and never reads
+    ``q_positions``/``kv_positions``, so it only engages when the caller
+    declares ``canonical_positions=True`` — with the default False, packed /
+    restarted position layouts always take the position-aware jnp path.
     """
     b, sq, h, d = q.shape
     _, skv, kv_heads, _ = k.shape
+
+    if kernel_impl not in ("auto", "jnp", "pallas_tuned"):
+        raise ValueError(f"unknown attention kernel_impl {kernel_impl!r}")
+    eligible = canonical_positions and _flash_kernel_eligible(
+        sq, skv, d, causal=causal, window=window,
+        logit_softcap=logit_softcap, bf16_probs=bf16_probs)
+    use_kernel = (kernel_impl == "pallas_tuned" and eligible) or (
+        kernel_impl == "auto" and eligible
+        and jax.default_backend() == "tpu")
+    if use_kernel:
+        return _flash_kernel_call(q, k, v, q_block, kv_block,
+                                  skip_masked_blocks)
     g = h // kv_heads
     scale = d ** -0.5
 

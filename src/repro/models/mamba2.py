@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.sc_layers import sc_proj as _proj
 from .layers import rms_norm
 
 __all__ = ["init_mamba_params", "mamba_block", "mamba_decode_step",
@@ -135,7 +136,7 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
     the last position (prefill -> decode handoff).
     """
     d_in, heads, n, conv_ch = _dims(cfg)
-    zxbcdt = x @ params["in_proj"]
+    zxbcdt = _proj(x, params["in_proj"], cfg)
     z, xin, bmat, cmat, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
     xbc_raw = jnp.concatenate([xin, bmat, cmat], -1)
@@ -152,7 +153,7 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
     y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
     y = y.reshape(b, l, d_in).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], eps=cfg.norm_eps)
-    out = y @ params["out_proj"]
+    out = _proj(y, params["out_proj"], cfg)
     if not return_cache:
         return out
     cache = MambaCache(conv=xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype),
@@ -171,7 +172,7 @@ def mamba_decode_step(params: dict, x: jax.Array, cache: MambaCache,
                       cfg: ModelConfig) -> tuple[jax.Array, MambaCache]:
     """Single-token recurrence. ``x: (B, 1, d)`` -> (y: (B, 1, d), new cache)."""
     d_in, heads, n, conv_ch = _dims(cfg)
-    zxbcdt = x @ params["in_proj"]
+    zxbcdt = _proj(x, params["in_proj"], cfg)
     z, xin, bmat, cmat, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
 
@@ -196,4 +197,5 @@ def mamba_decode_step(params: dict, x: jax.Array, cache: MambaCache,
     y = y + xh * params["D"][None, :, None]
     y = y.reshape(b, 1, d_in).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], eps=cfg.norm_eps)
-    return y @ params["out_proj"], MambaCache(conv=window[:, 1:], state=state)
+    return (_proj(y, params["out_proj"], cfg),
+            MambaCache(conv=window[:, 1:], state=state))

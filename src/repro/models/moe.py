@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.sc_layers import sc_proj
 
 __all__ = ["init_moe_params", "moe_ffn", "moe_capacity"]
 
@@ -48,6 +49,27 @@ def init_moe_params(cfg: ModelConfig, key: jax.Array, dtype) -> dict:
 
 def _act(name: str):
     return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def _expert_ffn(params: dict, xe: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-expert gated FFN on the dispatched tokens ``xe: (ng, E, C, d)``.
+
+    With ``cfg.use_sc_gemm`` each expert's three matmuls route through the
+    ``sc_proj`` dispatch (vmapped over the expert axis, so every expert
+    quantizes with its own per-tensor scale), honoring ``cfg.sc_impl`` like
+    the dense layers (DESIGN.md §6).
+    """
+    act = _act(cfg.act)
+    if cfg.use_sc_gemm:
+        ng, e, c, d = xe.shape
+        xef = xe.transpose(1, 0, 2, 3).reshape(e, ng * c, d)   # (E, rows, d)
+        dense = jax.vmap(lambda xr, w: sc_proj(xr, w, cfg))
+        h = act(dense(xef, params["w1"])) * dense(xef, params["w3"])
+        ye = dense(h, params["w2"])                             # (E, rows, d)
+        return ye.reshape(e, ng, c, d).transpose(1, 0, 2, 3)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w1"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    return jnp.einsum("gecf,efd->gecd", h, params["w2"])
 
 
 def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
@@ -89,10 +111,7 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, ja
     dispatch = (combine > 0).astype(xg.dtype)
 
     xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (ng,E,C,d)
-    act = _act(cfg.act)
-    h = act(jnp.einsum("gecd,edf->gecf", xe, params["w1"])) * \
-        jnp.einsum("gecd,edf->gecf", xe, params["w3"])
-    ye = jnp.einsum("gecf,efd->gecd", h, params["w2"])           # (ng,E,C,d)
+    ye = _expert_ffn(params, xe, cfg)                            # (ng,E,C,d)
     y = jnp.einsum("gtec,gecd->gtd", combine.astype(xg.dtype), ye)
 
     # --- Switch load-balance aux loss: E · Σ_e f_e · P_e
@@ -104,6 +123,7 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, ja
     out = y.reshape(b, s, d)
     if "shared" in params:
         sh = params["shared"]
-        hs = act(x @ sh["w1"]) * (x @ sh["w3"])
-        out = out + hs @ sh["w2"]
+        act = _act(cfg.act)
+        hs = act(sc_proj(x, sh["w1"], cfg)) * sc_proj(x, sh["w3"], cfg)
+        out = out + sc_proj(hs, sh["w2"], cfg)
     return out, aux

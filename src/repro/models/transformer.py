@@ -8,9 +8,12 @@ gemma2's local/global alternation, 4 for llama4's chunked+MoE interleave).
 Parameters are stacked over groups, so HLO size is depth-independent and
 activation remat is one `jax.checkpoint` per group.
 
-SC-GEMM integration (the paper's numeric): with ``cfg.use_sc_gemm`` the MLP
-projections run through ``repro.core.sc_layers.sc_dense`` — forward through
-the stochastic multiplier GEMM, straight-through gradients.
+SC-GEMM integration (the paper's numeric): with ``cfg.use_sc_gemm`` every
+dense projection — QKV/O, MLP, and the LM head — runs through
+``repro.core.sc_layers.sc_dense`` (forward through the stochastic multiplier
+GEMM, straight-through gradients), with the kernel implementation picked by
+``cfg.sc_impl`` via the DESIGN.md §6 dispatch (config → $REPRO_SC_IMPL →
+backend/autotune cache).
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.sc_layers import sc_dense
+from repro.core.sc_layers import sc_proj
 from repro.parallel.context import shard_activations
 from .layers import (apply_mrope, apply_rope, decode_attention,
                      flash_attention, rms_norm, rope, softcap)
@@ -121,19 +124,23 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
 
 # ----------------------------------------------------------------- forward
 
-def _project(x, w, b=None, *, sc=None):
-    out = sc_dense(x, w, sc) if sc is not None else x @ w
+def _project(x, w, cfg, b=None):
+    out = sc_proj(x, w, cfg)
     return out + b if b is not None else out
 
 
 def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                   window: int | None, positions, mrope_positions,
-                  cache: tuple | None, cache_pos) -> tuple[jax.Array, tuple | None]:
+                  cache: tuple | None, cache_pos,
+                  canonical_positions: bool = True) -> tuple[jax.Array, tuple | None]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
     def proj(w, bias):
-        out = jnp.einsum("bsd,dhe->bshe", x, w)
+        # (d, heads, hd) is a matmul with the head axes flattened; route it
+        # through the sc_proj dispatch like every other dense projection.
+        _, nh, _ = w.shape
+        out = sc_proj(x, w.reshape(d, nh * hd), cfg).reshape(b, s, nh, hd)
         return out + bias if bias is not None else out
 
     q = proj(p["wq"], p.get("bq"))
@@ -166,7 +173,8 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
             causal=True, window=window, logit_softcap=cfg.attn_softcap,
             q_block=min(cfg.q_block, s), kv_block=min(cfg.kv_block, s),
             skip_masked_blocks=cfg.skip_masked_blocks,
-            bf16_probs=cfg.bf16_probs)
+            bf16_probs=cfg.bf16_probs, kernel_impl=cfg.attn_kernel,
+            canonical_positions=canonical_positions)
         new_cache = (k, v) if cache == "collect" else None
     else:
         k_cache, v_cache = cache
@@ -179,23 +187,25 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                                window=window, logit_softcap=cfg.attn_softcap)
         new_cache = (k_cache, v_cache)
 
-    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), new_cache
+    o = sc_proj(out.reshape(b, s, h * hd), p["wo"].reshape(h * hd, d), cfg)
+    return o, new_cache
 
 
 def _mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    sc = cfg.sc_bits if cfg.use_sc_gemm else None
-    h = act(_project(x, p["w1"], sc=sc)) * _project(x, p["w3"], sc=sc)
-    return _project(h, p["w2"], sc=sc)
+    h = act(_project(x, p["w1"], cfg)) * _project(x, p["w3"], cfg)
+    return _project(h, p["w2"], cfg)
 
 
 def _layer_forward(layer: dict, x: jax.Array, cfg: ModelConfig, pos: int, *,
-                   positions, mrope_positions, cache, cache_pos):
+                   positions, mrope_positions, cache, cache_pos,
+                   canonical_positions: bool = True):
     window = cfg.window_at(pos)
     attn_in = rms_norm(x, layer["ln1"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
     attn_out, new_cache = _attn_forward(
         layer["attn"], attn_in, cfg, window=window, positions=positions,
-        mrope_positions=mrope_positions, cache=cache, cache_pos=cache_pos)
+        mrope_positions=mrope_positions, cache=cache, cache_pos=cache_pos,
+        canonical_positions=canonical_positions)
     if cfg.post_norms:
         attn_out = rms_norm(attn_out, layer["ln1_post"], eps=cfg.norm_eps,
                             plus_one=cfg.norm_plus_one)
@@ -235,6 +245,7 @@ def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Arr
     x = _embed_tokens(params, cfg, batch)
     b, s, _ = x.shape
     positions = batch.get("positions_1d")
+    canonical = positions is None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     mrope_positions = batch.get("mrope_positions")
@@ -248,7 +259,8 @@ def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Arr
             x, _, aux = _layer_forward(group_params[pos], x, cfg, pos,
                                        positions=positions,
                                        mrope_positions=mrope_positions,
-                                       cache=None, cache_pos=None)
+                                       cache=None, cache_pos=None,
+                                       canonical_positions=canonical)
             aux_total += aux
         return x, aux_total
 
@@ -262,7 +274,7 @@ def logits_from_hidden(params: dict, cfg: ModelConfig, hidden: jax.Array) -> jax
     head = params["lm_head"] if "lm_head" in params else (
         params["embed"].T if not cfg.n_codebooks else
         jnp.transpose(params["embed"], (2, 0, 1)).reshape(cfg.d_model, -1))
-    logits = hidden @ head
+    logits = sc_proj(hidden, head, cfg)
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
     if cfg.n_codebooks:
         logits = logits.reshape(*hidden.shape[:-1], cfg.n_codebooks, cfg.vocab_size)

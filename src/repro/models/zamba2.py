@@ -29,6 +29,12 @@ def n_attn_sites(cfg: ModelConfig) -> int:
     return cfg.n_layers // cfg.shared_attn_every
 
 
+def _head(x: jax.Array, w: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """LM-head projection through the configured numeric (DESIGN.md §6)."""
+    from repro.core.sc_layers import sc_proj
+    return sc_proj(x, w, cfg).astype(jnp.float32)
+
+
 def _dtype(cfg):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
@@ -112,7 +118,7 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
 
     def chunk_loss(carry, inputs):
         h, y = inputs
-        logits = (h @ params["lm_head"]).astype(jnp.float32)
+        logits = _head(h, params["lm_head"], cfg)
         valid = y >= 0
         logp = jax.nn.log_softmax(logits, axis=-1)
         ll = jnp.take_along_axis(logp, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
@@ -155,7 +161,7 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
     body = jax.checkpoint(group_body) if cfg.remat else group_body
     x, (mcaches, ks, vs) = jax.lax.scan(lambda c, g: body(c, g), x, grouped)
     x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
-    logits = (x[:, -1:] @ params["lm_head"]).astype(jnp.float32)
+    logits = _head(x[:, -1:], params["lm_head"], cfg)
     mcaches = jax.tree.map(
         lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mcaches)
     if extra_slots:
@@ -218,7 +224,7 @@ def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
     x, (new_mamba, ks, vs) = jax.lax.scan(
         group_body, x, (grouped_params, grouped_mamba, cache.k, cache.v))
     x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
-    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = _head(x, params["lm_head"], cfg)
     new_mamba = jax.tree.map(
         lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mamba)
     return logits, HybridCache(mamba=MambaCache(*new_mamba), k=ks, v=vs, pos=pos + 1)

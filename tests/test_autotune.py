@@ -51,8 +51,35 @@ def test_cache_roundtrip_across_instances(tmp_path):
     assert len(reloaded) == 1
     assert reloaded.get(key) == cfg
     doc = json.loads(path.read_text())
-    assert doc["version"] == 1
+    assert doc["version"] == 2
     assert doc["entries"][key]["us_per_call"] == pytest.approx(123.4)
+
+
+def test_cache_key_carries_interpret_mode():
+    """Interpret-mode sweep timings say nothing about compiled throughput:
+    the two modes must occupy disjoint cache keys on the same backend."""
+    k_interp = AutotuneCache.key(64, 200, 40, 8, backend="cpu", interpret=True)
+    k_comp = AutotuneCache.key(64, 200, 40, 8, backend="cpu", interpret=False)
+    assert k_interp != k_comp
+    assert ":interp:" in k_interp and ":compiled:" in k_comp
+    # default resolves from the active backend (CPU test runner -> interpret)
+    assert AutotuneCache.key(64, 200, 40, 8, backend="cpu") == k_interp
+
+
+def test_cache_invalidates_v1_documents(tmp_path):
+    """v1 entries carried no interpret flag — their timings' execution mode
+    is unknown, so a v2 load must drop them instead of serving them."""
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps({
+        "version": 1,
+        "entries": {"cpu:m64:k200:n40:b8":
+                    {"bm": 128, "bn": 128, "bk": 256, "chunk": 16}}}))
+    cache = AutotuneCache(path)
+    assert len(cache) == 0
+    # first write persists the migrated (empty) v2 document
+    cache.put(cache.key(1, 2, 3, 8, backend="cpu"), KernelConfig())
+    doc = json.loads(path.read_text())
+    assert doc["version"] == 2 and len(doc["entries"]) == 1
 
 
 def test_cache_tolerates_corrupt_file(tmp_path):

@@ -1,0 +1,55 @@
+"""benchmarks.check_regression: baseline matching and the >factor gate."""
+import json
+
+from benchmarks.check_regression import check, compare, find_baseline
+
+
+def _run(backend="cpu", interpret=True, smoke=True, sha="abc", us=1000.0):
+    return {"backend": backend, "interpret": interpret, "smoke": smoke,
+            "git_sha": sha, "timestamp": "t",
+            "rows": [{"name": "sc_gemm/pallas/64x128x64", "us_per_call": us,
+                      "derived": ""},
+                     {"name": "sc_gemm/bitexact/64x128x64", "us_per_call": 0.0,
+                      "derived": "True"}]}
+
+
+def test_baseline_matches_signature_only():
+    runs = [_run(us=10.0),                       # matching baseline
+            _run(backend="tpu", us=1.0),         # different backend
+            _run(interpret=False, us=1.0),       # different mode
+            _run(smoke=False, us=1.0),           # different size class
+            _run(us=15.0)]                       # latest
+    latest, base = find_baseline(runs)
+    assert latest is runs[-1] and base is runs[0]
+    # legacy records without interpret/git_sha fields never match new ones
+    legacy = {"backend": "cpu", "smoke": True, "rows": []}
+    _, base2 = find_baseline([legacy, _run()])
+    assert base2 is None
+
+
+def test_compare_flags_only_large_regressions():
+    base = _run(us=1000.0)
+    assert compare(_run(us=1990.0), base) == []          # under 2x: fine
+    bad = compare(_run(us=2010.0, sha="def"), base)
+    assert len(bad) == 1 and "2.01x" in bad[0]
+    # bit-exact marker rows (us == 0) never participate
+    assert all("bitexact" not in line for line in bad)
+
+
+def test_compare_skips_noise_floor_rows():
+    """Sub-floor rows swing >2.5x from scheduler noise alone on shared
+    runners; a 'regression' that stays under the floor never gates."""
+    assert compare(_run(us=295.0), _run(us=112.0)) == []     # both < 500us
+    assert compare(_run(us=2000.0), _run(us=112.0)) != []    # crossed the floor
+    assert compare(_run(us=295.0), _run(us=112.0), min_us=50.0) != []
+
+
+def test_check_end_to_end(tmp_path):
+    path = tmp_path / "traj.json"
+    path.write_text(json.dumps({"runs": [_run(us=1000.0), _run(us=1200.0)]}))
+    assert check(path) == 0
+    path.write_text(json.dumps({"runs": [_run(us=1000.0), _run(us=5000.0)]}))
+    assert check(path) == 1
+    path.write_text(json.dumps({"runs": [_run(us=1000.0)]}))
+    assert check(path) == 0                              # nothing to compare
+    assert check(tmp_path / "missing.json") == 1
