@@ -1,14 +1,19 @@
-"""CI regression gate over the ``BENCH_sc_gemm.json`` trajectory.
+"""CI regression gate over the benchmark trajectories:
+``BENCH_sc_gemm.json`` (kernel timings) and ``BENCH_serving.json`` (serving
+tok/s, encoded as µs per generated token so "lower is better" holds for
+both files and one comparator gates a >2x tok/s drop).
 
-Compares the newest run against the most recent *earlier* run with the same
-(backend, interpret, smoke) signature — in CI that is the last committed
-record, since the smoke bench appends its own run first — and fails when any
-shared timing row regresses by more than ``--factor`` (default 2x, generous
-because shared CI runners are noisy). Rows with ``us_per_call == 0``
-(bit-exactness markers) are skipped, as are rows where *both* timings sit
-under ``--min-us``: sub-half-millisecond rows are scheduler-noise-dominated
-on shared runners (back-to-back local runs show >2.5x swings) and a
-regression that stays below the floor is not actionable anyway.
+Compares each trajectory's newest run against the most recent *earlier* run
+with the same (backend, interpret, smoke) signature — in CI that is the last
+committed record, since the smoke benches append their own runs first — and
+fails when any shared timing row regresses by more than ``--factor``
+(default 2x, generous because shared CI runners are noisy). Rows with
+``us_per_call == 0`` (bit-exactness / step-ratio markers) are skipped, as
+are rows where *both* timings sit under ``--min-us``: sub-half-millisecond
+rows are scheduler-noise-dominated on shared runners (back-to-back local
+runs show >2.5x swings) and a regression that stays below the floor is not
+actionable anyway. A missing serving trajectory is not an error (the gate
+predates it on old branches).
 
 Caveat: the signature carries no machine identity, so the last committed
 record may come from different hardware than the CI runner (each record's
@@ -17,6 +22,7 @@ container-vs-runner deltas; if a fleet change makes that systematic, loosen
 ``--factor`` in CI or commit a runner-produced baseline record.
 
     PYTHONPATH=src python -m benchmarks.check_regression [--json PATH]
+                                                         [--serving-json PATH]
                                                          [--factor 2.0]
                                                          [--min-us 500]
 """
@@ -28,6 +34,7 @@ import sys
 from pathlib import Path
 
 from .run import DEFAULT_TRAJECTORY
+from .serving import DEFAULT_TRAJECTORY as SERVING_TRAJECTORY
 
 DEFAULT_FACTOR = 2.0
 DEFAULT_MIN_US = 500.0
@@ -70,10 +77,16 @@ def compare(latest: dict, baseline: dict, *,
 
 
 def check(path: Path, *, factor: float = DEFAULT_FACTOR,
-          min_us: float = DEFAULT_MIN_US) -> int:
+          min_us: float = DEFAULT_MIN_US, optional: bool = False) -> int:
     try:
         doc = json.loads(path.read_text())
-    except (OSError, ValueError) as e:
+    except OSError as e:
+        if optional:
+            print(f"[check_regression] {path.name} absent; skipping ({e})")
+            return 0
+        print(f"[check_regression] cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    except ValueError as e:
         print(f"[check_regression] cannot read {path}: {e}", file=sys.stderr)
         return 1
     runs = doc.get("runs") or []
@@ -82,27 +95,33 @@ def check(path: Path, *, factor: float = DEFAULT_FACTOR,
         return 0
     latest, baseline = find_baseline(runs)
     if baseline is None:
-        print(f"[check_regression] no earlier run matches signature "
-              f"{_signature(latest)}; nothing to compare")
+        print(f"[check_regression] {path.name}: no earlier run matches "
+              f"signature {_signature(latest)}; nothing to compare")
         return 0
     failures = compare(latest, baseline, factor=factor, min_us=min_us)
     n = sum(1 for r in latest.get("rows", []) if r.get("us_per_call", 0) > 0)
     if failures:
         for line in failures:
-            print(f"[check_regression] REGRESSION {line}", file=sys.stderr)
+            print(f"[check_regression] REGRESSION {path.name} {line}",
+                  file=sys.stderr)
         return 1
-    print(f"[check_regression] ok: {n} timing rows within {factor:.2f}x of "
-          f"baseline ({baseline.get('timestamp')}, sha {baseline.get('git_sha')})")
+    print(f"[check_regression] ok: {path.name}: {n} timing rows within "
+          f"{factor:.2f}x of baseline ({baseline.get('timestamp')}, "
+          f"sha {baseline.get('git_sha')})")
     return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", type=Path, default=DEFAULT_TRAJECTORY)
+    ap.add_argument("--serving-json", type=Path, default=SERVING_TRAJECTORY)
     ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
     ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US)
     args = ap.parse_args()
-    raise SystemExit(check(args.json, factor=args.factor, min_us=args.min_us))
+    rc = check(args.json, factor=args.factor, min_us=args.min_us)
+    rc |= check(args.serving_json, factor=args.factor, min_us=args.min_us,
+                optional=True)
+    raise SystemExit(rc)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,10 @@ distribution), SC-GEMM microbenchmarks, and the dry-run roofline report.
 
 Every run that includes the ``sc_gemm`` suite appends a timestamped record to
 the ``BENCH_sc_gemm.json`` trajectory (repo root by default, ``--json`` to
-relocate), so per-impl timings accumulate across commits.
+relocate), so per-impl timings accumulate across commits. The smoke grid
+includes a decode-shaped (M = batch, S = 1) problem so the skinny autotune
+bucket is exercised per commit; the serving engine has its own trajectory
+(``python -m benchmarks.serving``, BENCH_serving.json).
 """
 from __future__ import annotations
 

@@ -15,10 +15,14 @@ import numpy as np
 
 __all__ = ["run", "SHAPES_FULL", "SHAPES_SMOKE"]
 
-#: (M, K, N) grid; the ragged shape exercises the kernel's padding path.
+#: (M, K, N) grid; the ragged shape exercises the kernel's padding path and
+#: the (8, K, N) rows are decode-shaped — M = live batch at S=1 — so the
+#: skinny autotune bucket (kernels.autotune.bucket_m) shows up in the
+#: trajectory's tuned-config column.
 SHAPES_FULL = [(128, 512, 128), (256, 1024, 256), (100, 300, 50),
-               (512, 512, 512)]
-SHAPES_SMOKE = [(32, 64, 32), (48, 96, 16), (64, 128, 64), (100, 300, 50)]
+               (512, 512, 512), (8, 512, 512)]
+SHAPES_SMOKE = [(32, 64, 32), (48, 96, 16), (64, 128, 64), (100, 300, 50),
+                (8, 64, 128)]
 
 #: Cap on per-shape tuning candidates in the bench (logged in the row).
 TUNE_CANDIDATE_CAP = 8

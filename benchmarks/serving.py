@@ -1,0 +1,124 @@
+"""Serving-engine benchmark: continuous vs static batching on a synthetic
+mixed-length workload, recording tok/s, p50/p99 request latency, and decode
+steps into the ``BENCH_serving.json`` trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serving [--smoke] [--json PATH]
+
+Rows encode throughput as ``us_per_call`` = µs per *generated token*
+(1e6 / tok/s), so ``benchmarks.check_regression`` gates a >2x tok/s drop with
+the exact machinery that gates the SC-GEMM kernel rows: lower is better,
+matching-signature baselines, noise floor. ``derived`` carries the human
+numbers (tok/s, latency percentiles, decode steps).
+
+The workload is deterministic (fixed seeds, greedy sampling) and each mode
+is measured on its second run — the first run pays XLA compilation for the
+prefill/decode executables, which the compiled-step caches
+(``launch.steps.cached_*``) then reuse.
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TRAJECTORY = REPO_ROOT / "BENCH_serving.json"
+
+#: (requests, capacity, prompt_len, max_gen)
+SMOKE = (8, 4, 16, 8)
+FULL = (32, 8, 64, 48)
+
+
+def _requests(cfg, n: int, prompt_len: int, max_gen: int):
+    """Bimodal mixed-length workload: alternating short/long generations —
+    the adversarial case for static batching, where every short request
+    waits out its gang's longest neighbour."""
+    from repro.serving import Request
+
+    rng = np.random.default_rng(7)
+    shape = ((prompt_len, cfg.n_codebooks) if cfg.n_codebooks
+             else (prompt_len,))
+    short = max(max_gen // 4, 1)
+    return [Request(uid=f"bench-{i}",
+                    prompt=rng.integers(0, cfg.vocab_size, size=shape,
+                                        dtype=np.int32),
+                    max_new_tokens=short if i % 2 == 0 else max_gen)
+            for i in range(n)]
+
+
+def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
+    import jax
+
+    from repro.configs.registry import ARCHS
+    from repro.models import bind
+    from repro.serving import Engine, default_serving_mesh
+
+    n, capacity, prompt_len, max_gen = SMOKE if smoke else FULL
+    cfg = ARCHS[arch].reduced(dtype="float32")
+    params = bind(cfg).init_params(jax.random.PRNGKey(0))
+    mesh = default_serving_mesh()   # shared -> both modes reuse executables
+    max_seq = prompt_len + max_gen
+
+    rows = []
+    stats = {}
+    for continuous in (True, False):
+        mode = "continuous" if continuous else "static"
+        for measured in (False, True):   # first run compiles, second times
+            engine = Engine(cfg, params, capacity=capacity, max_seq=max_seq,
+                            mesh=mesh, continuous=continuous)
+            engine.run(_requests(cfg, n, prompt_len, max_gen))
+            st = engine.stats
+        stats[mode] = st
+        rows.append({
+            "name": f"serving/{mode}/{cfg.name}",
+            "us_per_call": round(1e6 / st["tok_per_s"], 1),
+            "derived": (f"tok_s={st['tok_per_s']:.1f}"
+                        f" p50_ms={st['p50_latency_s'] * 1e3:.0f}"
+                        f" p99_ms={st['p99_latency_s'] * 1e3:.0f}"
+                        f" decode_steps={st['decode_steps']}"
+                        f" requests={st['requests']}"
+                        f" capacity={capacity}"),
+        })
+    # scheduling quality marker (us_per_call=0 rows are gate-exempt): the
+    # whole point of the engine — same workload, fewer batched decode steps
+    cont, stat = stats["continuous"], stats["static"]
+    rows.append({
+        "name": f"serving/step_ratio/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (f"continuous={cont['decode_steps']}"
+                    f" static={stat['decode_steps']}"
+                    f" ratio={cont['decode_steps'] / max(stat['decode_steps'], 1):.2f}"),
+    })
+    return rows
+
+
+def main() -> None:
+    import sys
+
+    from .run import append_trajectory
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload / reduced config (CI)")
+    ap.add_argument("--json", type=Path, default=DEFAULT_TRAJECTORY,
+                    help="serving trajectory file (default: repo root)")
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+
+    rows = run(smoke=args.smoke, arch=args.arch)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},"
+              f"{str(row['derived']).replace(',', ';')}")
+    try:
+        append_trajectory(args.json, rows, smoke=args.smoke)
+        print(f"serving/trajectory,0,appended to {args.json.name}",
+              file=sys.stderr)
+    except OSError as e:
+        print(f"serving/trajectory,0,NOT appended ({type(e).__name__}: {e})",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,13 @@ def sc_dense(x: jax.Array, w: jax.Array, bits: int = 8,
     x2 = x.reshape(-1, x.shape[-1])
     # Upcast only for the kernel call; the caller's dtype is restored on the
     # way out and the residuals (saved by _sc_dense_fwd) never see float32.
+    # row_quant: per-token activation scales, so a token's output is
+    # independent of whatever else shares the batch — the serving engine's
+    # bit-identical continuous-batching invariant rests on this (DESIGN.md
+    # §7); it is also strictly finer-grained quantization than a per-tensor
+    # scale.
     out = sc_matmul(x2.astype(jnp.float32), w.astype(jnp.float32), bits=bits,
-                    impl=resolve_impl(impl))
+                    impl=resolve_impl(impl), row_quant=True)
     return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 

@@ -68,14 +68,26 @@ def _signed_counts_block(sx, mx, sy, my, bits: int) -> jax.Array:
     return (s * o).sum(axis=1, dtype=jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "k_block"))
+def _quantize_lhs(a: jax.Array, bits: int, row_quant: bool):
+    """LHS quantization: per-tensor scale, or per-row (``axis=-1``) when
+    ``row_quant`` — each output row then depends only on its own input row,
+    which makes batched inference *batch-composition invariant*: a sequence
+    decoded in a serving slot pool alongside arbitrary neighbours produces
+    the exact counts it would produce alone (DESIGN.md §7). Weights stay
+    per-tensor; their scale is batch-independent already."""
+    return quantize_sign_magnitude(a, bits=bits,
+                                   axis=-1 if row_quant else None)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k_block", "row_quant"))
 def sc_matmul_reference(a: jax.Array, b: jax.Array, *, bits: int = 8,
-                        k_block: int = 128) -> jax.Array:
+                        k_block: int = 128,
+                        row_quant: bool = False) -> jax.Array:
     """Oracle SC-GEMM: quantize, multiply every pair via the closed form, sum.
 
     K is processed in blocks of ``k_block`` to bound the (M, Kb, N) broadcast.
     """
-    qa = quantize_sign_magnitude(a, bits=bits)
+    qa = _quantize_lhs(a, bits, row_quant)
     qb = quantize_sign_magnitude(b, bits=bits)
     m, k = a.shape
     _, n = b.shape
@@ -137,9 +149,9 @@ def sc_residual_term(sx, mx, sy, my, bits: int, chunk: int = 16) -> jax.Array:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "chunk"))
+@functools.partial(jax.jit, static_argnames=("bits", "chunk", "row_quant"))
 def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
-                        chunk: int = 16) -> jax.Array:
+                        chunk: int = 16, row_quant: bool = False) -> jax.Array:
     """TPU-native SC-GEMM: MXU matmul term + VPU clamped-min residual.
 
     Bit-identical to :func:`sc_matmul_reference` (tests assert exact equality
@@ -147,7 +159,7 @@ def sc_matmul_mxu_split(a: jax.Array, b: jax.Array, *, bits: int = 8,
     residual accumulation.
     """
     half = stream_length(bits) // 2
-    qa = quantize_sign_magnitude(a, bits=bits)
+    qa = _quantize_lhs(a, bits, row_quant)
     qb = quantize_sign_magnitude(b, bits=bits)
 
     msb = (qb.mag >= half).astype(jnp.int32)
@@ -188,7 +200,7 @@ def resolve_impl(impl: str | None = None) -> str:
 
 
 def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
-              impl: str = "mxu_split") -> jax.Array:
+              impl: str = "mxu_split", row_quant: bool = False) -> jax.Array:
     """Dispatching entry point.
 
     ``impl`` ∈ {"ref"/"reference", "mxu_split", "pallas", "pallas_tuned",
@@ -197,6 +209,10 @@ def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
     from the on-disk cache); "auto" resolves per DESIGN.md §6 — the
     ``$REPRO_SC_IMPL`` override if set, else the backend-level choice from
     :func:`repro.kernels.autotune.choose_impl`. All impls are count-identical.
+
+    ``row_quant`` quantizes the LHS with per-row scales (see
+    :func:`_quantize_lhs`); the model path (``sc_layers.sc_dense``) always
+    sets it so inference is batch-composition invariant.
     """
     impl = resolve_impl(impl)
     if impl == "auto":
@@ -205,13 +221,14 @@ def sc_matmul(a: jax.Array, b: jax.Array, *, bits: int = 8,
         _, n = b.shape
         impl = choose_impl(m, k, n, bits=bits)
     if impl in ("ref", "reference"):
-        return sc_matmul_reference(a, b, bits=bits)
+        return sc_matmul_reference(a, b, bits=bits, row_quant=row_quant)
     if impl == "mxu_split":
-        return sc_matmul_mxu_split(a, b, bits=bits)
+        return sc_matmul_mxu_split(a, b, bits=bits, row_quant=row_quant)
     if impl == "pallas":
         from repro.kernels.ops import sc_matmul_pallas
-        return sc_matmul_pallas(a, b, bits=bits)
+        return sc_matmul_pallas(a, b, bits=bits, row_quant=row_quant)
     if impl == "pallas_tuned":
         from repro.kernels.ops import sc_matmul_pallas
-        return sc_matmul_pallas(a, b, bits=bits, tune=True)
+        return sc_matmul_pallas(a, b, bits=bits, tune=True,
+                                row_quant=row_quant)
     raise ValueError(f"unknown impl {impl!r}")

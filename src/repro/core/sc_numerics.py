@@ -54,20 +54,22 @@ def dequantize_sign_magnitude(q: SignMagnitude) -> jax.Array:
     return (q.sign.astype(jnp.float32) * q.mag.astype(jnp.float32)) * q.scale
 
 
-def recover_counts(out, a, b, *, bits: int = 8):
+def recover_counts(out, a, b, *, bits: int = 8, row_quant: bool = False):
     """De-scale an SC-GEMM float output back to its exact integer counts.
 
     The final ``counts · N·Δ_a·Δ_b`` multiply may differ by 1 ulp between
     jitted and eager implementations, so exact-equality comparisons (tests,
     benchmark bit-exactness rows) must be made on the recovered integers —
     counts stay below 2²⁴, so float64 rounding is exact. Returns an int64
-    numpy array.
+    numpy array. ``row_quant`` must match the producer's LHS quantization
+    (per-row scales, e.g. any output of ``sc_layers.sc_dense``).
     """
     import numpy as np
 
     from .tcu import stream_length
 
-    qa = quantize_sign_magnitude(jnp.asarray(a, jnp.float32), bits=bits)
+    qa = quantize_sign_magnitude(jnp.asarray(a, jnp.float32), bits=bits,
+                                 axis=-1 if row_quant else None)
     qb = quantize_sign_magnitude(jnp.asarray(b, jnp.float32), bits=bits)
     scale = stream_length(bits) * np.float64(qa.scale) * np.float64(qb.scale)
     return np.round(np.asarray(out, np.float64) / scale).astype(np.int64)

@@ -61,16 +61,44 @@ __all__ = [
     "choose_impl",
     "best_of_us",
     "default_cache_path",
+    "bucket_m",
+    "SKINNY_M_MAX",
 ]
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-#: v2 adds the interpret flag to every key. v1 entries are *invalidated* on
-#: load (not migrated): a v1 timing's execution mode is unrecorded, so an
-#: interpret-mode CPU sweep could silently poison compiled-run dispatch.
-CACHE_VERSION = 2
+#: v2 added the interpret flag to every key. v3 buckets skinny (decode-
+#: shaped) M extents and widens their candidate grid with GEMV-like bm
+#: tiles — a v2 winner at a skinny key was swept without those candidates,
+#: so keeping it would permanently pin decode shapes to the old 128-row
+#: tile (a cache hit never re-sweeps). Older documents are *invalidated* on
+#: load (not migrated); affected shapes simply re-tune once.
+CACHE_VERSION = 3
 
 #: VMEM budget used to prune candidates; conservative fraction of ~16 MiB.
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+#: Largest M treated as "skinny" (decode-shaped: one token per sequence, so
+#: M = live batch). Skinny problems share a bucketed cache key and get
+#: GEMV-like bm candidates — see :func:`bucket_m`.
+SKINNY_M_MAX = 64
+
+
+def bucket_m(m: int) -> int:
+    """Bucket class for the M extent of a GEMM tuning key.
+
+    Decode-time ``sc_dense`` calls are (B, 1, d)-shaped — M is the live
+    batch, which fluctuates with serving load. Bucketing skinny M to the
+    next power of two (8, 16, 32, 64) makes every decode batch size in a
+    bucket resolve to one tuned GEMV-like config instead of sweeping (and
+    caching) per exact batch size; prefill/train-sized M (> SKINNY_M_MAX)
+    keeps its exact extent, where the tile choice genuinely depends on it.
+    """
+    if m > SKINNY_M_MAX:
+        return m
+    b = 8
+    while b < m:
+        b *= 2
+    return b
 
 
 def _is_tracer(x) -> bool:
@@ -159,9 +187,11 @@ class AutotuneCache:
     @staticmethod
     def key(m: int, k: int, n: int, bits: int, backend: str | None = None,
             interpret: bool | None = None) -> str:
+        """Skinny (decode-shaped) M extents are bucketed (:func:`bucket_m`),
+        so every live-batch size in a bucket shares one tuned entry."""
         backend = backend or jax.default_backend()
         return (f"sc_gemm:{backend}:{_mode(interpret, backend)}"
-                f":m{m}:k{k}:n{n}:b{bits}")
+                f":m{bucket_m(m)}:k{k}:n{n}:b{bits}")
 
     @staticmethod
     def stream_key(size: int, bits: int, backend: str | None = None,
@@ -185,15 +215,28 @@ class AutotuneCache:
                 f":sq{sq}:skv{skv}:d{d}:{dtype}:{c}")
 
     def _load(self) -> None:
+        self._entries = self._read_disk()
+
+    def _read_disk(self) -> dict[str, dict]:
+        """Current on-disk entries; {} for a missing, torn, or foreign file.
+
+        A torn/invalid document is never fatal — the affected keys simply
+        re-tune (concurrent writers use atomic replace, so tearing should
+        only come from crashes or foreign tools scribbling on the path).
+        """
         try:
             doc = json.loads(self.path.read_text())
         except (OSError, ValueError):
-            return
-        if doc.get("version") == CACHE_VERSION:
-            self._entries = doc.get("entries", {})
-        # version 1 (or anything unknown): discard — v1 keys carried no
-        # interpret flag, so the recorded timings' execution mode is unknown
-        # and they must not seed either mode's dispatch.
+            return {}
+        if not isinstance(doc, dict) or doc.get("version") != CACHE_VERSION:
+            # version 1 (or anything unknown): discard — v1 keys carried no
+            # interpret flag, so the recorded timings' execution mode is
+            # unknown and they must not seed either mode's dispatch.
+            return {}
+        entries = doc.get("entries")
+        if not isinstance(entries, dict):
+            return {}
+        return {k: v for k, v in entries.items() if isinstance(v, dict)}
 
     def get(self, key: str, cls: type = KernelConfig):
         ent = self._entries.get(key)
@@ -214,12 +257,21 @@ class AutotuneCache:
         self._save()
 
     def _save(self) -> None:
-        """Best-effort persist; an unwritable path degrades to in-memory."""
-        doc = {"version": CACHE_VERSION, "entries": self._entries}
+        """Best-effort persist; an unwritable path degrades to in-memory.
+
+        Concurrent-writer safe: the on-disk document is re-read and merged
+        under this process's keys before the atomic replace, so two tuners
+        sweeping different shapes interleave without losing each other's
+        winners (last writer wins only on a genuinely shared key), and a
+        reader never observes a torn file (write-to-temp + rename).
+        """
         tmp = None
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            # Atomic replace so concurrent tuners never observe a torn file.
+            merged = self._read_disk()
+            merged.update(self._entries)
+            self._entries = merged
+            doc = {"version": CACHE_VERSION, "entries": merged}
             fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
                                        prefix=self.path.name, suffix=".tmp")
             with os.fdopen(fd, "w") as f:
@@ -267,13 +319,19 @@ def candidate_configs(m: int, k: int, n: int, *,
 
     Blocks larger than the (128-aligned) problem extent only add padding
     work, so they are dropped; every candidate satisfies the VMEM budget and
-    chunk | bk.
+    chunk | bk. Skinny (decode-shaped, M ≤ SKINNY_M_MAX) problems add
+    GEMV-like bm candidates ahead of the default 128 tile — a decode step's
+    M is the live batch, and a 128-row tile is ≥ 2x padding waste there.
     """
     m_cap = _round_up(max(m, 8), 128)
     n_cap = _round_up(max(n, 128), 128)
     k_cap = _round_up(max(k, 128), 128)
+    bm_options: tuple[int, ...] = (128, 256)
+    if m <= SKINNY_M_MAX:
+        skinny = tuple(b for b in (8, 16, 32, 64) if b >= bucket_m(m))
+        bm_options = skinny + bm_options
     out: list[KernelConfig] = []
-    for bm in (128, 256):
+    for bm in bm_options:
         if bm > m_cap and bm != 128:
             continue
         for bn in (128, 256):
@@ -432,9 +490,14 @@ def get_or_tune(a, b, *, bits: int = 8,
     not the values) whose extents are capped at (SYNTH_M_CAP, SYNTH_KN_CAP)
     — candidates are still pruned against the true shape, but the timed slab
     stays bounded even when the traced global shape is production-sized.
+
+    Skinny (decode-shaped) M is bucketed: the key, the candidate grid, and
+    the synthetic sweep all use ``bucket_m(m)``, so one GEMV-like winner
+    serves every live batch size in the bucket.
     """
     m, k = a.shape
     _, n = b.shape
+    m = bucket_m(m)
     cache = cache if cache is not None else _default_cache()
     key = cache.key(m, k, n, bits, interpret=interpret)
     hit = cache.get(key, KernelConfig)
@@ -571,9 +634,14 @@ def choose_impl(m: int, k: int, n: int, *, bits: int = 8) -> str:
     """Implementation choice behind ``sc_matmul(..., impl="auto")``.
 
     On TPU the Pallas kernel with autotuned blocks wins for every shape large
-    enough to tile; tiny problems and non-TPU backends (where Pallas runs in
-    interpret mode) fall back to the XLA-fused MXU split.
+    enough to tile — including decode-shaped (skinny-M) GEMMs, which resolve
+    to a skinny-bucket GEMV-like config instead of the prefill tile as long
+    as the K·N face is MXU-sized. Tiny problems and non-TPU backends (where
+    Pallas runs in interpret mode) fall back to the XLA-fused MXU split.
     """
-    if jax.default_backend() == "tpu" and min(m, n) * k >= 128 * 128:
-        return "pallas_tuned"
+    if jax.default_backend() == "tpu":
+        if min(m, n) * k >= 128 * 128:
+            return "pallas_tuned"
+        if m <= SKINNY_M_MAX and k * n >= 128 * 128:
+            return "pallas_tuned"
     return "mxu_split"

@@ -40,13 +40,17 @@ def _pad_to(arr, mult, axis, value=0):
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk", "chunk",
-                                             "interpret"))
+                                             "interpret", "row_quant"))
 def _sc_matmul_pallas_jit(a: jax.Array, b: jax.Array, *, bits: int,
                           bm: int, bn: int, bk: int, chunk: int,
-                          interpret: bool) -> jax.Array:
+                          interpret: bool, row_quant: bool) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
-    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits)
+    # Per-row LHS scales (row_quant) change only the quantization and the
+    # final dequantize multiply — the kernel itself sees integer planes
+    # either way, so the counts stay count-identical with the jnp impls.
+    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits,
+                                 axis=-1 if row_quant else None)
     qb = quantize_sign_magnitude(b.astype(jnp.float32), bits=bits)
     # zero magnitude ⇒ padded K contributes nothing; signs pad with +1.
     sx = _pad_to(_pad_to(qa.sign.astype(jnp.int32), bm, 0, 1), bk, 1, 1)
@@ -62,7 +66,7 @@ def _sc_matmul_pallas_jit(a: jax.Array, b: jax.Array, *, bits: int,
 def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
                      bm: int = 128, bn: int = 128, bk: int = 512,
                      chunk: int = 8, interpret: bool | None = None,
-                     tune: bool = False) -> jax.Array:
+                     tune: bool = False, row_quant: bool = False) -> jax.Array:
     """SC-GEMM ``a @ b`` through the Pallas kernel. ``a: (M, K)``, ``b: (K, N)``.
 
     With ``tune=True`` the block configuration (bm, bn, bk, chunk) is resolved
@@ -78,7 +82,8 @@ def sc_matmul_pallas(a: jax.Array, b: jax.Array, *, bits: int = 8,
         cfg = get_or_tune(a, b, bits=bits, interpret=interpret)
         bm, bn, bk, chunk = cfg.bm, cfg.bn, cfg.bk, cfg.chunk
     return _sc_matmul_pallas_jit(a, b, bits=bits, bm=bm, bn=bn, bk=bk,
-                                 chunk=chunk, interpret=interpret)
+                                 chunk=chunk, interpret=interpret,
+                                 row_quant=row_quant)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret",

@@ -21,9 +21,12 @@ def sc_matmul_counts_ref(sx, mx, sy, my, bits: int) -> jnp.ndarray:
     return (s * o).sum(axis=1, dtype=jnp.int32)
 
 
-def sc_matmul_ref(a, b, bits: int = 8) -> jnp.ndarray:
-    """Float-in/float-out SC-GEMM oracle (quantize -> counts -> dequantize)."""
-    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits)
+def sc_matmul_ref(a, b, bits: int = 8, row_quant: bool = False) -> jnp.ndarray:
+    """Float-in/float-out SC-GEMM oracle (quantize -> counts -> dequantize).
+
+    ``row_quant`` mirrors the library impls' per-row LHS scales."""
+    qa = quantize_sign_magnitude(a.astype(jnp.float32), bits=bits,
+                                 axis=-1 if row_quant else None)
     qb = quantize_sign_magnitude(b.astype(jnp.float32), bits=bits)
     counts = sc_matmul_counts_ref(qa.sign, qa.mag, qb.sign, qb.mag, bits)
     return counts.astype(jnp.float32) * (stream_length(bits) * qa.scale * qb.scale)

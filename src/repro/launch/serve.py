@@ -1,12 +1,15 @@
-"""Serving driver: batched prefill -> token-by-token decode with a KV/SSM
-cache, greedy or temperature sampling.
+"""Serving driver: a thin CLI over the continuous-batching engine
+(``repro.serving``, DESIGN.md §7), keeping static batching as an A/B mode
+and the sequential per-request :func:`generate` as the bit-exactness
+baseline.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --reduced \
-        --batch 4 --prompt-len 32 --gen 32
+        --requests 8 --prompt-len 32 --gen 32 [--no-continuous] [--sc-gemm]
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -17,15 +20,34 @@ from repro.configs.registry import ARCHS
 from repro.models import bind
 
 
-def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
-             temperature: float = 0.0, seed: int = 0):
-    """``prompts: (B, S)`` int32 -> (B, gen_tokens) sampled continuations."""
-    m = bind(cfg)
-    b, s = prompts.shape[:2]
+@functools.lru_cache(maxsize=32)
+def _compiled_steps(cfg, gen_tokens: int):
+    """Jitted (prefill, decode) pair for a config.
 
+    One pair per (cfg, gen_tokens): the old per-call ``jax.jit(lambda ...)``
+    closures created *fresh* jit wrappers on every ``generate`` call, so XLA
+    recompiled both steps for every request even at identical shapes. The
+    wrappers here live as long as the process and re-trace only on new
+    shapes; the serving engine gets the same reuse from
+    ``launch.steps.cached_prefill_step``/``cached_decode_step``.
+    """
+    m = bind(cfg)
     prefill = jax.jit(lambda p, batch: m.prefill_step(
         p, batch, extra_slots=gen_tokens))
     decode = jax.jit(m.decode_step)
+    return prefill, decode
+
+
+def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
+             temperature: float = 0.0, seed: int = 0):
+    """``prompts: (B, S)`` int32 -> (B, gen_tokens) sampled continuations.
+
+    The *sequential* baseline: every sequence decodes ``gen_tokens`` steps
+    in lockstep. With B=1 and greedy sampling this is the reference stream
+    the serving engine reproduces bit-for-bit (tests/test_serving.py).
+    """
+    prefill, decode = _compiled_steps(cfg, gen_tokens)
+    b, s = prompts.shape[:2]
 
     logits, cache = prefill(params, {"tokens": prompts})
     key = jax.random.PRNGKey(seed)
@@ -50,14 +72,24 @@ def generate(cfg, params, prompts: jnp.ndarray, *, gen_tokens: int,
 def main() -> None:
     from repro.core.sc_matmul import SC_IMPLS
     from repro.launch import apply_numeric_overrides
+    from repro.serving import Engine, Request
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests in the synthetic workload")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="slot-pool capacity (decode batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens per request; the synthetic workload "
+                         "mixes lengths in [gen/4, gen] to exercise "
+                         "continuous batching")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-continuous", action="store_true",
+                    help="static batching A/B: admit in gangs, every request "
+                         "waits for the gang's slowest")
     ap.add_argument("--sc-gemm", action="store_true",
                     help="serve through the SC-GEMM numeric (inference "
                          "emulation of the paper's multiplier)")
@@ -72,18 +104,34 @@ def main() -> None:
                                   sc_impl=args.sc_impl)
     m = bind(cfg)
     params = m.init_params(jax.random.PRNGKey(0))
-    shape = ((args.batch, args.prompt_len, cfg.n_codebooks)
-             if cfg.n_codebooks else (args.batch, args.prompt_len))
-    prompts = jax.random.randint(jax.random.PRNGKey(1), shape, 0,
-                                 cfg.vocab_size, dtype=jnp.int32)
+
+    rng = np.random.default_rng(1)
+    shape = ((args.prompt_len, cfg.n_codebooks) if cfg.n_codebooks
+             else (args.prompt_len,))
+    gens = rng.integers(max(args.gen // 4, 1), args.gen + 1,
+                        size=args.requests)
+    requests = [
+        Request(uid=f"req-{i}",
+                prompt=rng.integers(0, cfg.vocab_size, size=shape,
+                                    dtype=np.int32),
+                max_new_tokens=int(g), temperature=args.temperature, seed=i)
+        for i, g in enumerate(gens)
+    ]
+
+    engine = Engine(cfg, params, capacity=args.capacity,
+                    max_seq=args.prompt_len + args.gen,
+                    continuous=not args.no_continuous)
     t0 = time.time()
-    tokens = generate(cfg, params, prompts, gen_tokens=args.gen,
-                      temperature=args.temperature)
+    results = engine.run(requests)
     dt = time.time() - t0
-    total = int(np.prod(tokens.shape[:2]))
-    print(f"[serve] generated {tokens.shape} in {dt:.1f}s "
-          f"({total / dt:.1f} tok/s incl. compile)")
-    print(tokens[0, :16])
+    st = engine.stats
+    print(f"[serve] {st['mode']}: {st['requests']} requests, "
+          f"{st['generated_tokens']} tokens in {dt:.1f}s "
+          f"({st['tok_per_s']:.1f} tok/s incl. compile), "
+          f"{st['decode_steps']} decode steps, "
+          f"p50 {st['p50_latency_s'] * 1e3:.0f}ms "
+          f"p99 {st['p99_latency_s'] * 1e3:.0f}ms")
+    print(f"[serve] first stream: {results[0].tokens[:16]}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
                                      param_pspecs)
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "cached_prefill_step", "cached_decode_step",
            "abstract_params", "abstract_opt_state", "activation_spec",
            "opt_pspecs"]
 
@@ -151,9 +152,13 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
                                         batch_size=batch_size))
     data = _data_axes(mesh)
     from repro.parallel.sharding import fit_spec
-    logits_shape = (batch_size, 1, cfg.vocab_size)
-    logits_sh = NamedSharding(mesh, fit_spec(P(data, None, None),
-                                             logits_shape, mesh))
+    if cfg.n_codebooks:
+        logits_shape = (batch_size, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        logits_shape = (batch_size, 1, cfg.vocab_size)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(*((data,) + (None,) * (len(logits_shape) - 1))),
+                       logits_shape, mesh))
     shardings = {
         "params": named(mesh, p_specs),
         "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
@@ -193,3 +198,24 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
     jitted = jax.jit(decode, donate_argnums=(1,),
                      out_shardings=(logits_sh, cache_sh))
     return jitted, shardings, params_abs
+
+
+# Compiled-step reuse: a serving engine admits requests one at a time, and a
+# naive driver that rebuilds its jitted closures per request (the old
+# serve.py::generate) throws away XLA's executable cache on every call.
+# These wrappers memoize the *builders* on (cfg, mesh, shape) — cfg is a
+# frozen dataclass and Mesh hashes by device grid, so equal serving
+# configurations share one jitted step across requests and engine instances.
+
+@functools.lru_cache(maxsize=64)
+def cached_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                        seq_len: int, extra_slots: int = 0):
+    return build_prefill_step(cfg, mesh, batch_size=batch_size,
+                              seq_len=seq_len, extra_slots=extra_slots)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
+                       seq_len: int):
+    return build_decode_step(cfg, mesh, batch_size=batch_size,
+                             seq_len=seq_len)

@@ -1,0 +1,109 @@
+"""Uniform slot insert/read/evict contract over the family decode caches.
+
+Every family's cache (``transformer.KVCache``, ``ssm_lm.SSMCacheState``,
+``zamba2.HybridCache``) satisfies one structural contract (DESIGN.md §7):
+
+* array leaves carry the **batch/slot dimension at axis 1** — axis 0 stacks
+  layers / scan groups / attention sites, so ``leaf[:, i]`` is everything the
+  model holds for sequence ``i``;
+* the ``pos`` field is a per-sequence ``(B,)`` int32 vector of absolute
+  positions (how far each sequence has decoded).
+
+That single contract is what lets one serving engine drive all three model
+families: a fixed-capacity *slot pool* cache is just ``init_cache(capacity,
+max_seq)``, and admission/eviction are the pure functions below. All three
+are shape-preserving pytree maps, safe under ``jax.jit`` with a traced
+``slot`` index.
+
+A single-sequence cache (from a B=1 prefill) may have a *shorter* sequence
+axis than the pool — ``slot_insert`` writes it as a prefix and
+``decode_attention`` masks the unfilled tail, so per-request prefill caches
+drop into a long-lived pool without reshaping.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
+           "SLOT_AXIS"]
+
+#: The slot (batch) dimension of every non-``pos`` cache leaf.
+SLOT_AXIS = 1
+
+#: Name of the per-sequence position field in every family's cache.
+_POS_FIELD = "pos"
+
+
+def _is_pos(path: tuple) -> bool:
+    last = path[-1]
+    name = getattr(last, "name", getattr(last, "key", None))
+    return str(name) == _POS_FIELD
+
+
+def _check_rank(leaf) -> None:
+    if leaf.ndim < SLOT_AXIS + 1:
+        raise ValueError(
+            f"cache leaf of rank {leaf.ndim} cannot carry the slot axis at "
+            f"{SLOT_AXIS}; the family cache violates the slot contract")
+
+
+def slot_insert(pool: Any, single: Any, slot) -> Any:
+    """Write a single-sequence cache (B=1) into slot ``slot`` of ``pool``.
+
+    ``single``'s non-slot extents must be ≤ the pool's (a shorter prefill
+    cache lands as a prefix of the pool's sequence axis). Returns the new
+    pool; ``slot`` may be a Python int or a traced int32 scalar.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(path, pl, sl):
+        if _is_pos(path):
+            return pl.at[slot].set(jnp.reshape(sl, (-1,))[0])
+        _check_rank(pl)
+        start = (jnp.zeros((), jnp.int32), slot) + \
+            (jnp.zeros((), jnp.int32),) * (pl.ndim - 2)
+        return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype), start)
+
+    return jax.tree_util.tree_map_with_path(one, pool, single)
+
+
+def slot_read(pool: Any, slot) -> Any:
+    """Extract slot ``slot`` as a single-sequence (B=1) cache with the pool's
+    sequence extents (the inverse of :func:`slot_insert` up to tail zeros)."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(path, pl):
+        if _is_pos(path):
+            return jax.lax.dynamic_slice_in_dim(pl, slot, 1)
+        _check_rank(pl)
+        return jax.lax.dynamic_slice_in_dim(pl, slot, 1, axis=SLOT_AXIS)
+
+    return jax.tree_util.tree_map_with_path(one, pool)
+
+
+def slot_evict(pool: Any, slot) -> Any:
+    """Zero slot ``slot``'s state and reset its position.
+
+    Zeroing (not just pos reset) keeps the batched decode numerics of the
+    *other* slots reproducible: a freed slot's stale K/V or SSM state never
+    feeds any computation (positions mask it), but zero state is what a
+    fresh ``init_cache`` slot holds, so pool contents stay a pure function
+    of the admitted requests.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(path, pl):
+        if _is_pos(path):
+            return pl.at[slot].set(0)
+        _check_rank(pl)
+        return pl.at[:, slot].set(jnp.zeros_like(pl[:, slot]))
+
+    return jax.tree_util.tree_map_with_path(one, pool)
+
+
+def slot_positions(pool: Any) -> jax.Array:
+    """The pool's per-slot ``(B,)`` position vector."""
+    return pool.pos

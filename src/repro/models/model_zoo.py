@@ -9,7 +9,7 @@
 from __future__ import annotations
 
 from repro.configs.base import ModelConfig
-from . import ssm_lm, transformer, zamba2
+from . import cache_ops, ssm_lm, transformer, zamba2
 
 __all__ = ["bind"]
 
@@ -52,6 +52,19 @@ class BoundModel:
     def prefill_step(self, params, batch, *, extra_slots: int = 0):
         return self._mod.prefill_step(params, self.cfg, batch,
                                       extra_slots=extra_slots)
+
+    # --- slot contract (models/cache_ops.py, DESIGN.md §7): every family's
+    # cache keeps the batch/slot dim at axis 1 and a per-sequence (B,) pos
+    # vector, so one serving engine can admit/evict sequences independently.
+
+    def cache_insert(self, pool, single, slot):
+        return cache_ops.slot_insert(pool, single, slot)
+
+    def cache_read(self, pool, slot):
+        return cache_ops.slot_read(pool, slot)
+
+    def cache_evict(self, pool, slot):
+        return cache_ops.slot_evict(pool, slot)
 
 
 def bind(cfg: ModelConfig) -> BoundModel:

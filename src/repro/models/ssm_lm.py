@@ -91,12 +91,15 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
     x, caches = jax.lax.scan(lambda c, l: body_fn(c, l), x, params["layers"])
     x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
     logits = (x[:, -1:] @ params["embed"].T).astype(jnp.float32)
-    s = batch["tokens"].shape[1]
+    b, s = batch["tokens"].shape[:2]
     return logits, SSMCacheState(mamba=MambaCache(*caches),
-                                 pos=jnp.asarray(s, jnp.int32))
+                                 pos=jnp.full((b,), s, jnp.int32))
 
 
 class SSMCacheState(NamedTuple):
+    """Decode cache. Slot contract (``models.cache_ops``, DESIGN.md §7):
+    array leaves carry the batch/slot dimension at axis 1; ``pos`` is a
+    per-sequence ``(B,)`` int32 position vector."""
     mamba: MambaCache   # leaves stacked over layers
     pos: jax.Array
 
@@ -106,7 +109,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> SSMCacheState:
     single = init_mamba_cache(cfg, batch, _dtype(cfg))
     stacked = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy(), single)
-    return SSMCacheState(mamba=MambaCache(*stacked), pos=jnp.zeros((), jnp.int32))
+    return SSMCacheState(mamba=MambaCache(*stacked),
+                         pos=jnp.zeros((batch,), jnp.int32))
 
 
 def decode_step(params: dict, cfg: ModelConfig, cache: SSMCacheState,

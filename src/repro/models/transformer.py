@@ -159,7 +159,20 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
 
-    if cache is None or cache == "collect":
+    if cache is not None and cache != "collect":
+        # decode: write this token's K/V at each sequence's own position.
+        # ``cache_pos: (B,)`` — per-sequence absolute positions, so sequences
+        # admitted at different times (serving slot pool, DESIGN.md §7) share
+        # one batched step.
+        k_cache, v_cache = cache
+        cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        batch_idx = jnp.arange(b)
+        k_cache = k_cache.at[batch_idx, cache_pos].set(k[:, 0])
+        v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0])
+        out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
+                               window=window, logit_softcap=cfg.attn_softcap)
+        new_cache = (k_cache, v_cache)
+    else:
         if cfg.attn_kv_gather:
             # §Perf: force K/V into the gathered-once layout so the flash
             # loops slice locally instead of re-gathering per block step
@@ -176,16 +189,6 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
             bf16_probs=cfg.bf16_probs, kernel_impl=cfg.attn_kernel,
             canonical_positions=canonical_positions)
         new_cache = (k, v) if cache == "collect" else None
-    else:
-        k_cache, v_cache = cache
-        cache_pos = jnp.asarray(cache_pos, jnp.int32)
-        zero = jnp.zeros((), jnp.int32)
-        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (zero, cache_pos, zero, zero))
-        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (zero, cache_pos, zero, zero))
-        out = decode_attention(q, k_cache, v_cache,
-                               q_position=jnp.full((b,), cache_pos, jnp.int32),
-                               window=window, logit_softcap=cfg.attn_softcap)
-        new_cache = (k_cache, v_cache)
 
     o = sc_proj(out.reshape(b, s, h * hd), p["wo"].reshape(h * hd, d), cfg)
     return o, new_cache
@@ -350,13 +353,16 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
                                     (0, 0), (0, 0)))
         ks = tuple(pad(k) for k in ks)
         vs = tuple(pad(v) for v in vs)
-    cache = KVCache(k=ks, v=vs, pos=jnp.asarray(s, jnp.int32))
+    cache = KVCache(k=ks, v=vs, pos=jnp.full((b,), s, jnp.int32))
     return logits, cache
 
 
 # ------------------------------------------------------------------ decode
 
 class KVCache(NamedTuple):
+    """Decode cache. Slot contract (``models.cache_ops``, DESIGN.md §7):
+    array leaves carry the batch/slot dimension at axis 1; ``pos`` is a
+    per-sequence ``(B,)`` int32 position vector."""
     k: Any   # tuple over group positions of (ngroups, B, S, KV, hd)
     v: Any
     pos: jax.Array
@@ -369,20 +375,24 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
     shape = (ngroups, batch, max_seq, kv, hd)
     k = tuple(jnp.zeros(shape, dtype) for _ in range(cfg.group_size))
     v = tuple(jnp.zeros(shape, dtype) for _ in range(cfg.group_size))
-    return KVCache(k=k, v=v, pos=jnp.zeros((), jnp.int32))
+    return KVCache(k=k, v=v, pos=jnp.zeros((batch,), jnp.int32))
 
 
 def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
                 batch: dict) -> tuple[jax.Array, KVCache]:
     """One token for every sequence in the batch. ``batch["tokens"]: (B, 1)``
-    (or (B, 1, K) for codebooks). Returns (logits, updated cache)."""
+    (or (B, 1, K) for codebooks). Returns (logits, updated cache).
+
+    ``cache.pos`` is per-sequence, so co-batched sequences may sit at
+    different positions (continuous batching)."""
     x = _embed_tokens(params, cfg, batch)
     b = x.shape[0]
-    pos = cache.pos
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(cache.pos, (b,))
+    positions = pos[:, None]
     mrope_positions = batch.get("mrope_positions")
     if cfg.mrope_sections is not None and mrope_positions is None:
-        mrope_positions = jnp.broadcast_to(pos, (3, b, 1)).astype(jnp.int32)
+        mrope_positions = jnp.broadcast_to(pos[None, :, None],
+                                           (3, b, 1)).astype(jnp.int32)
 
     gsz = cfg.group_size
 

@@ -169,11 +169,14 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
                                     (0, 0), (0, 0)))
         ks, vs = pad(ks), pad(vs)
     cache = HybridCache(mamba=MambaCache(*mcaches), k=ks, v=vs,
-                        pos=jnp.asarray(s, jnp.int32))
+                        pos=jnp.full((b,), s, jnp.int32))
     return logits, cache
 
 
 class HybridCache(NamedTuple):
+    """Decode cache. Slot contract (``models.cache_ops``, DESIGN.md §7):
+    array leaves carry the batch/slot dimension at axis 1; ``pos`` is a
+    per-sequence ``(B,)`` int32 position vector."""
     mamba: Any            # MambaCache with leaves stacked over n_layers
     k: jax.Array          # (sites, B, S, KV, hd)
     v: jax.Array
@@ -188,13 +191,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> HybridCache:
         lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy(), single)
     shape = (sites, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
     return HybridCache(mamba=mamba, k=jnp.zeros(shape, dtype),
-                       v=jnp.zeros(shape, dtype), pos=jnp.zeros((), jnp.int32))
+                       v=jnp.zeros(shape, dtype),
+                       pos=jnp.zeros((batch,), jnp.int32))
 
 
 def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
                 batch: dict) -> tuple[jax.Array, HybridCache]:
     x = jnp.take(params["embed"], batch["tokens"], axis=0)   # (B, 1, d)
-    pos = cache.pos
+    pos = jnp.broadcast_to(cache.pos, (x.shape[0],))         # per-sequence
     every = cfg.shared_attn_every
     n_groups = cfg.n_layers // every
 
@@ -202,7 +206,7 @@ def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
         lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
     grouped_mamba = jax.tree.map(
         lambda a: a.reshape(n_groups, every, *a.shape[1:]), cache.mamba)
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    positions = pos[:, None]
 
     def group_body(x, inputs):
         group, mcaches, kc, vc = inputs

@@ -24,7 +24,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 
-__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "named", "DATA_AXES"]
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "slot_pool_pspecs",
+           "named", "DATA_AXES"]
 
 DATA_AXES = ("pod", "data")          # batch / FSDP axes (pod may be absent)
 
@@ -201,7 +202,9 @@ def cache_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh, *,
         name = _key_of(path[-1])
         if leaf.ndim == 0:
             return P()
-        if name in ("k", "v") or (len(path) >= 2 and _key_of(path[-2]) in ("k", "v")):
+        if name == "pos":                        # per-sequence (B,) positions
+            raw = P(data if not seq_mode else None)
+        elif name in ("k", "v") or (len(path) >= 2 and _key_of(path[-2]) in ("k", "v")):
             # (stack, B, S, KV, hd)
             if seq_mode:
                 raw = P(None, None, "data", None, "model")
@@ -218,6 +221,20 @@ def cache_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh, *,
         return fit_spec(raw, leaf.shape, mesh)
 
     return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def slot_pool_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh, *,
+                     capacity: int) -> Any:
+    """Cache pspecs for a serving *slot pool* (DESIGN.md §7).
+
+    A slot pool is structurally a decode cache whose batch axis is the fixed
+    slot capacity, so slots shard exactly like batch: the slot axis spreads
+    over the data axes and KV heads / head_dim / SSM heads over ``model``,
+    and the per-slot ``pos`` vector follows the slot axis. Admission and
+    eviction (``models.cache_ops``) are slot-axis scatters, which GSPMD
+    keeps local to the shard that owns the slot.
+    """
+    return cache_pspecs(cfg, cache, mesh, batch_size=capacity)
 
 
 def named(mesh: Mesh, pspecs: Any) -> Any:

@@ -1,0 +1,8 @@
+"""Continuous-batching serving: request queue, slot-based cache pool, and
+the engine loop driving the mesh-sharded prefill/decode steps (DESIGN.md §7)."""
+from .engine import Engine, default_serving_mesh
+from .queue import Request, RequestQueue, RequestResult
+from .slots import SlotEntry, SlotPool
+
+__all__ = ["Engine", "default_serving_mesh", "Request", "RequestQueue",
+           "RequestResult", "SlotEntry", "SlotPool"]

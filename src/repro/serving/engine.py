@@ -1,0 +1,222 @@
+"""Continuous-batching serving engine (DESIGN.md §7).
+
+The loop: **admit → decode → evict**, repeated until queue and pool drain.
+
+* *Admit (prefill-on-admit)*: while a slot is free and a request waits, run
+  a B=1 prefill through the mesh-sharded ``launch.steps.cached_prefill_step``
+  (one compiled executable per prompt length, reused across requests), sample
+  the first token from its logits, and insert the prefilled cache into the
+  slot pool.
+* *Decode (batched)*: one ``cached_decode_step`` call advances *all* live
+  slots a token. Slots sit at different absolute positions — the per-slot
+  ``pos`` vector in every family cache makes that well-defined — and the
+  decode-shaped (M = capacity, S = 1) SC-GEMMs resolve to the skinny
+  autotune bucket (``kernels.autotune.bucket_m``) instead of prefill tiles.
+* *Evict*: a request leaves on EOS or length; its slot is zeroed and free
+  for the next admission *on the same step* — no request ever waits for a
+  stranger's tail.
+
+Determinism invariant: with SC-GEMM enabled, the engine's per-request token
+streams are **bit-identical** to the sequential per-request
+``launch.serve.generate`` baseline, for every family. Three properties
+compose into that guarantee: deterministic SC streams are count-exact
+(PAPER.md — no LFSR state to perturb), ``sc_dense`` quantizes activations
+per-row (a token's counts never depend on batch neighbours), and per-slot
+positions reproduce exactly the sequential cache layout. Static batching
+(``continuous=False``) keeps the same math and admits in gangs — the A/B
+baseline for scheduling, not numerics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.launch.steps import cached_decode_step, cached_prefill_step
+from repro.models import bind
+
+from .queue import Request, RequestQueue, RequestResult
+from .slots import SlotEntry, SlotPool
+
+__all__ = ["Engine", "default_serving_mesh"]
+
+
+def default_serving_mesh() -> Mesh:
+    """1x1 ("data", "model") mesh: the engine always runs through the
+    sharded step builders; a single-device mesh makes every constraint a
+    no-op without a separate unsharded code path."""
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class Engine:
+    """Slot-pool serving engine over one bound model.
+
+    ``capacity`` is the decode batch (slot count); ``max_seq`` bounds
+    ``prompt + max_new`` per request. ``continuous=False`` degrades to
+    static batching: a gang of requests is admitted only into an *empty*
+    pool and the next gang waits until every member finished — the
+    every-request-waits-for-the-slowest behaviour continuous batching
+    removes.
+    """
+
+    def __init__(self, cfg, params, *, capacity: int = 4, max_seq: int = 256,
+                 mesh: Mesh | None = None, continuous: bool = True):
+        cfg.validate()
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.continuous = continuous
+        self.mesh = mesh if mesh is not None else default_serving_mesh()
+        self._m = bind(cfg)
+
+        self._decode, shardings, _ = cached_decode_step(
+            cfg, self.mesh, batch_size=capacity, seq_len=max_seq)
+        self._params = jax.device_put(params, shardings["params"])
+        pool_cache = jax.device_put(self._m.init_cache(capacity, max_seq),
+                                    shardings["cache"])
+        self.pool = SlotPool(self._m, capacity, max_seq, cache=pool_cache)
+
+        tok_shape = ((capacity, 1, cfg.n_codebooks) if cfg.n_codebooks
+                     else (capacity, 1))
+        self._tok_buf = np.zeros(tok_shape, np.int32)
+        self.queue = RequestQueue()
+        self.stats: dict[str, Any] = {}
+        self._step = 0          # decode-step counter (admissions are free)
+        self._n_prefills = 0
+
+    # ------------------------------------------------------------ plumbing
+
+    def _prefill_request(self, req: Request):
+        """B=1 prefill through the cached sharded step for this prompt
+        length; returns (last-token logit rows, single cache)."""
+        prefill, shardings, _ = cached_prefill_step(
+            self.cfg, self.mesh, batch_size=1, seq_len=req.prompt_len)
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        logits, cache = prefill(self._params, batch)
+        self._n_prefills += 1
+        return np.asarray(jax.device_get(logits))[0, -1], cache
+
+    def _sample(self, entry: SlotEntry, row: np.ndarray) -> np.ndarray:
+        """One token from a logit row ((V,) or (K, V) for codebooks).
+
+        Greedy is pure argmax. temperature > 0 walks a per-request PRNG
+        chain (seeded by the request, split once per emitted token), so a
+        stream is a function of the request alone — which slot or engine
+        step produced it is irrelevant.
+        """
+        req = entry.request
+        if req.temperature <= 0:
+            return np.argmax(row, axis=-1).astype(np.int32)
+        if entry.key is None:
+            entry.key = jax.random.PRNGKey(req.seed)
+        entry.key, sub = jax.random.split(entry.key)
+        tok = jax.random.categorical(
+            sub, jnp.asarray(row) / req.temperature, axis=-1)
+        return np.asarray(tok, np.int32)
+
+    def _finish_reason(self, entry: SlotEntry, tok: np.ndarray) -> str | None:
+        req = entry.request
+        if (req.eos_id is not None and tok.ndim == 0
+                and int(tok) == req.eos_id):
+            return "eos"
+        if entry.n_generated >= req.max_new_tokens:
+            return "length"
+        return None
+
+    def _emit(self, slot: int, entry: SlotEntry, tok: np.ndarray,
+              results: dict) -> None:
+        """Record a sampled token; finish + evict or park it for the next
+        decode step."""
+        entry.generated.append(tok)
+        reason = self._finish_reason(entry, tok)
+        if reason is not None:
+            self.pool.evict(slot)
+            req = entry.request
+            results[req.uid] = RequestResult(
+                uid=req.uid,
+                tokens=np.stack(entry.generated).astype(np.int32),
+                prompt_len=req.prompt_len,
+                finished_reason=reason,
+                enqueued_at=req.enqueued_at,
+                admitted_at=entry.admitted_at,
+                finished_at=time.perf_counter(),
+                admit_step=entry.admit_step,
+                finish_step=self._step,
+            )
+        else:
+            self._tok_buf[slot] = tok
+
+    def _admit_one(self, req: Request, results: dict) -> None:
+        rows, single_cache = self._prefill_request(req)
+        entry = SlotEntry(request=req, admitted_at=time.perf_counter(),
+                          admit_step=self._step)
+        slot = self.pool.admit(entry, single_cache)
+        self._emit(slot, entry, self._sample(entry, rows), results)
+
+    def _decode_once(self) -> np.ndarray:
+        """One batched decode step over every slot; returns the (C, ...)
+        last-token logit rows."""
+        batch = {"tokens": jnp.asarray(self._tok_buf)}
+        logits, self.pool.cache = self._decode(self._params, self.pool.cache,
+                                               batch)
+        self._step += 1
+        return np.asarray(jax.device_get(logits))[:, -1]
+
+    # ----------------------------------------------------------- the loop
+
+    def run(self, requests: Sequence[Request] = ()) -> list[RequestResult]:
+        """Drain ``requests`` (plus anything already queued); returns
+        results in submission order. Populates ``self.stats``."""
+        # fail fast on requests that cannot fit, before any device work —
+        # a mid-run refusal at admission would abort the loop and discard
+        # every already-finished stream (SlotPool.admit stays the backstop)
+        for r in requests:
+            need = r.prompt_len + r.max_new_tokens
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request {r.uid!r} needs {need} cache positions "
+                    f"(prompt {r.prompt_len} + max_new {r.max_new_tokens}) "
+                    f"but the engine holds max_seq={self.max_seq}")
+        order = [r.uid for r in requests]
+        for r in requests:
+            self.queue.submit(r)
+        results: dict[str, RequestResult] = {}
+        t0 = time.perf_counter()
+        steps0, prefills0 = self._step, self._n_prefills
+
+        while self.queue or self.pool.entries:
+            may_admit = self.continuous or not self.pool.entries
+            while may_admit and self.pool.has_free and self.queue:
+                self._admit_one(self.queue.pop(), results)
+                if not self.continuous and not self.pool.has_free:
+                    break
+            if not self.pool.entries:
+                continue        # gang finished at admission (max_new == 1)
+            rows = self._decode_once()
+            for slot in self.pool.active_slots:
+                entry = self.pool.entries[slot]
+                self._emit(slot, entry, self._sample(entry, rows[slot]),
+                           results)
+
+        wall = time.perf_counter() - t0
+        out = [results[uid] for uid in order] if order else \
+            sorted(results.values(), key=lambda r: r.admitted_at)
+        generated = sum(r.n_generated for r in out)
+        lat = sorted(r.latency_s for r in out) or [0.0]
+        self.stats = {
+            "mode": "continuous" if self.continuous else "static",
+            "requests": len(out),
+            "generated_tokens": generated,
+            "decode_steps": self._step - steps0,
+            "prefills": self._n_prefills - prefills0,
+            "wall_s": wall,
+            "tok_per_s": generated / wall if wall > 0 else float("inf"),
+            "p50_latency_s": lat[len(lat) // 2],
+            "p99_latency_s": lat[min(len(lat) - 1,
+                                     int(np.ceil(0.99 * len(lat))) - 1)],
+        }
+        return out

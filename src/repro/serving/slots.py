@@ -1,0 +1,122 @@
+"""Fixed-capacity slot pool over a family decode cache.
+
+The pool *is* a batched decode cache — ``init_cache(capacity, max_seq)`` —
+whose batch axis the engine treats as serving slots via the uniform slot
+contract in ``models/cache_ops.py`` (DESIGN.md §7): admit = insert a B=1
+prefill cache at a free slot index, evict = zero the slot and recycle it.
+One pool type therefore serves the transformer KV cache, the Mamba SSM
+state, and the Zamba2 hybrid without family branches.
+
+Invariants (asserted here, tested in tests/test_serving.py):
+
+* a slot is either free or holds exactly one live request;
+* admission fails loudly when full or when ``prompt + max_new`` cannot fit
+  ``max_seq`` (KV families write at absolute positions — overflow would
+  silently corrupt, so it must be impossible);
+* eviction returns the lowest-index-first reusable slot and zeroes its
+  state, so pool contents stay a pure function of the live requests.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.models.cache_ops import slot_evict, slot_insert, slot_read
+
+from .queue import Request
+
+__all__ = ["SlotPool", "SlotEntry"]
+
+
+@dataclass
+class SlotEntry:
+    """Host-side bookkeeping for one live request in a slot."""
+    request: Request
+    admitted_at: float
+    admit_step: int
+    generated: list = field(default_factory=list)   # sampled ids, host ints
+    key: Any = None                                 # per-request PRNG chain
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+
+class SlotPool:
+    """Slot bookkeeping + the pooled device cache.
+
+    ``pool.cache`` is the live device pytree; the engine reassigns it after
+    every (donating) decode step, and admission/eviction rebind it through
+    the pure ``cache_ops`` scatters.
+    """
+
+    def __init__(self, model, capacity: int, max_seq: int, *,
+                 cache: Any = None):
+        if capacity < 1:
+            raise ValueError("slot pool needs capacity ≥ 1")
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self._model = model
+        self.cache = model.init_cache(capacity, max_seq) if cache is None \
+            else cache
+        self._free: list[int] = list(range(capacity))
+        heapq.heapify(self._free)
+        self.entries: dict[int, SlotEntry] = {}
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    @property
+    def active_slots(self) -> list[int]:
+        return sorted(self.entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ------------------------------------------------------- admit / evict
+
+    def admit(self, entry: SlotEntry, single_cache: Any) -> int:
+        """Insert a prefilled B=1 cache into the lowest free slot."""
+        req = entry.request
+        if not self._free:
+            raise RuntimeError("slot pool is full")
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_seq:
+            raise ValueError(
+                f"request {req.uid!r} needs {need} cache positions "
+                f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
+                f"but the pool holds max_seq={self.max_seq}")
+        slot = heapq.heappop(self._free)
+        assert slot not in self.entries, "free-list/entries desync"
+        self.cache = slot_insert(self.cache, single_cache, slot)
+        self.entries[slot] = entry
+        return slot
+
+    def evict(self, slot: int) -> SlotEntry:
+        """Free ``slot``, zeroing its device state; returns its entry."""
+        entry = self.entries.pop(slot)
+        self.cache = slot_evict(self.cache, slot)
+        heapq.heappush(self._free, slot)
+        return entry
+
+    def read(self, slot: int) -> Any:
+        """The slot's state as a B=1 cache (pool sequence extents)."""
+        if slot not in self.entries:
+            raise KeyError(f"slot {slot} is not live")
+        return slot_read(self.cache, slot)
+
+    # ------------------------------------------------------------- tokens
+
+    def positions(self) -> np.ndarray:
+        """Per-slot device positions, pulled to host (testing/debug)."""
+        return np.asarray(self.cache.pos)

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.autotune import (AutotuneCache, KernelConfig, autotune,
+from repro.kernels.autotune import (AutotuneCache, CACHE_VERSION,
+                                    KernelConfig, autotune,
                                     candidate_configs, choose_impl,
                                     get_or_tune, VMEM_BUDGET_BYTES)
 
@@ -31,9 +32,38 @@ def test_candidate_configs_valid(m, k, n):
 
 def test_candidate_configs_prunes_oversized_blocks():
     small = candidate_configs(8, 16, 8)
-    assert all(c.bm == 128 and c.bn == 128 and c.bk == 128 for c in small)
+    assert all(c.bn == 128 and c.bk == 128 for c in small)
     big = candidate_configs(1024, 4096, 1024)
     assert any(c.bk == 512 for c in big)
+    # prefill/train-sized M never sees GEMV tiles
+    assert all(c.bm >= 128 for c in big)
+
+
+def test_candidate_configs_skinny_adds_gemv_tiles():
+    """Decode-shaped (M ≤ SKINNY_M_MAX) problems offer bm tiles at the
+    bucket size, ahead of the 128 default (they must survive candidate
+    caps)."""
+    cands = candidate_configs(8, 256, 128)
+    assert cands[0].bm == 8
+    assert {c.bm for c in cands} >= {8, 16, 32, 64, 128}
+    cands33 = candidate_configs(33, 256, 128)
+    assert cands33[0].bm == 64          # bucket_m(33) == 64
+    for c in cands + cands33:
+        assert c.is_valid()
+
+
+def test_bucket_m_classes():
+    from repro.kernels.autotune import SKINNY_M_MAX, bucket_m
+    assert [bucket_m(m) for m in (1, 8, 9, 16, 33, 64)] == [8, 8, 16, 16,
+                                                            64, 64]
+    assert bucket_m(SKINNY_M_MAX + 1) == SKINNY_M_MAX + 1   # exact above
+    # the cache key buckets skinny M: every batch size in a bucket shares
+    # one tuned entry; K/N stay exact
+    k3 = AutotuneCache.key(3, 256, 128, 8, backend="cpu")
+    k8 = AutotuneCache.key(8, 256, 128, 8, backend="cpu")
+    k9 = AutotuneCache.key(9, 256, 128, 8, backend="cpu")
+    assert k3 == k8 != k9
+    assert ":m8:" in k8 and ":m16:" in k9
 
 
 # ---------------------------------------------------------------------- cache
@@ -51,7 +81,7 @@ def test_cache_roundtrip_across_instances(tmp_path):
     assert len(reloaded) == 1
     assert reloaded.get(key) == cfg
     doc = json.loads(path.read_text())
-    assert doc["version"] == 2
+    assert doc["version"] == CACHE_VERSION
     assert doc["entries"][key]["us_per_call"] == pytest.approx(123.4)
 
 
@@ -66,20 +96,23 @@ def test_cache_key_carries_interpret_mode():
     assert AutotuneCache.key(64, 200, 40, 8, backend="cpu") == k_interp
 
 
-def test_cache_invalidates_v1_documents(tmp_path):
-    """v1 entries carried no interpret flag — their timings' execution mode
-    is unknown, so a v2 load must drop them instead of serving them."""
+@pytest.mark.parametrize("stale_version", [1, 2])
+def test_cache_invalidates_stale_documents(tmp_path, stale_version):
+    """Older documents must be dropped, not served: v1 keys carried no
+    interpret flag, and v2 winners at skinny keys were swept without the
+    GEMV-like bm candidates (a hit never re-sweeps, so a stale winner would
+    pin decode shapes to the old 128-row tile forever)."""
     path = tmp_path / "tune.json"
     path.write_text(json.dumps({
-        "version": 1,
-        "entries": {"cpu:m64:k200:n40:b8":
+        "version": stale_version,
+        "entries": {"sc_gemm:cpu:interp:m8:k512:n512:b8":
                     {"bm": 128, "bn": 128, "bk": 256, "chunk": 16}}}))
     cache = AutotuneCache(path)
     assert len(cache) == 0
-    # first write persists the migrated (empty) v2 document
+    # first write persists the migrated (empty) current-version document
     cache.put(cache.key(1, 2, 3, 8, backend="cpu"), KernelConfig())
     doc = json.loads(path.read_text())
-    assert doc["version"] == 2 and len(doc["entries"]) == 1
+    assert doc["version"] == CACHE_VERSION and len(doc["entries"]) == 1
 
 
 def test_cache_tolerates_corrupt_file(tmp_path):
@@ -89,6 +122,36 @@ def test_cache_tolerates_corrupt_file(tmp_path):
     assert len(cache) == 0
     cache.put(cache.key(1, 2, 3, 8, backend="cpu"), KernelConfig())
     assert len(AutotuneCache(path)) == 1
+
+
+def test_cache_concurrent_writers_merge(tmp_path):
+    """Two cache instances (≈ two tuner processes) writing different keys
+    must both survive on disk: _save merges the on-disk document under its
+    own entries before the atomic replace."""
+    path = tmp_path / "tune.json"
+    c1, c2 = AutotuneCache(path), AutotuneCache(path)   # both loaded empty
+    k1 = c1.key(128, 256, 128, 8, backend="cpu")
+    k2 = c2.key(256, 512, 256, 8, backend="cpu")
+    c1.put(k1, KernelConfig(bk=128))
+    c2.put(k2, KernelConfig(bk=256))        # c2 never saw c1's entry
+    merged = AutotuneCache(path)
+    assert merged.get(k1) == KernelConfig(bk=128)
+    assert merged.get(k2) == KernelConfig(bk=256)
+
+
+def test_cache_tolerates_foreign_entries_table(tmp_path):
+    """A scribbled-on entries table (wrong types) degrades to re-tuning,
+    never a crash."""
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps({"version": CACHE_VERSION,
+                                "entries": ["not", "a", "map"]}))
+    assert len(AutotuneCache(path)) == 0
+    path.write_text(json.dumps({"version": CACHE_VERSION,
+                                "entries": {"good": {"bm": 128, "bn": 128,
+                                                     "bk": 128, "chunk": 8},
+                                            "bad": 42}}))
+    cache = AutotuneCache(path)
+    assert len(cache) == 1 and cache.get("good") == KernelConfig(bk=128, chunk=8)
 
 
 def test_cache_unwritable_path_degrades_to_memory():

@@ -65,10 +65,11 @@ def test_sc_dense_count_identity_across_impls(shape_name, impl):
         key = jax.random.PRNGKey(m * 31 + k * 7 + n)
         k1, k2 = jax.random.split(key)
         x, w = _rand(k1, (m, k)), _rand(k2, (k, n))
-        ref_counts = recover_counts(sc_dense(x, w, 8, "ref"), x, w)
+        ref_counts = recover_counts(sc_dense(x, w, 8, "ref"), x, w,
+                                    row_quant=True)
         out = sc_dense(x, w, 8, impl)
         np.testing.assert_array_equal(
-            recover_counts(out, x, w), ref_counts,
+            recover_counts(out, x, w, row_quant=True), ref_counts,
             err_msg=f"impl={impl} diverged on ({m},{k})x({k},{n})")
 
 
@@ -107,10 +108,12 @@ def test_env_override_reaches_sc_dense(monkeypatch):
     """$REPRO_SC_IMPL steers sc_dense's default dispatch end to end."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(1))
     x, w = _rand(k1, (8, 16)), _rand(k2, (16, 8))
-    ref_counts = recover_counts(sc_dense(x, w, 8, "ref"), x, w)
+    ref_counts = recover_counts(sc_dense(x, w, 8, "ref"), x, w,
+                                row_quant=True)
     monkeypatch.setenv(IMPL_ENV, "pallas")
     np.testing.assert_array_equal(
-        recover_counts(sc_dense(x, w, 8, None), x, w), ref_counts)
+        recover_counts(sc_dense(x, w, 8, None), x, w, row_quant=True),
+        ref_counts)
     monkeypatch.setenv(IMPL_ENV, "bogus")
     with pytest.raises(ValueError, match="REPRO_SC_IMPL"):
         sc_dense(x, w, 8, None)
@@ -159,7 +162,7 @@ def test_tuned_matmul_inside_jit(tmp_path, monkeypatch):
     out = jitted(a, b)
     np.testing.assert_array_equal(
         recover_counts(out, a, b),
-        recover_counts(sc_dense(a, b, 8, "ref"), a, b))
+        recover_counts(sc_matmul(a, b, impl="ref"), a, b))
     doc = json.loads((tmp_path / "tune.json").read_text())
     keys = list(doc["entries"])
     assert keys and all(k.startswith("sc_gemm:") for k in keys)

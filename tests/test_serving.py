@@ -1,0 +1,207 @@
+"""Serving engine acceptance (ISSUE 3 / DESIGN.md §7).
+
+* slot-pool invariants: admit/evict bookkeeping, slot reuse, overflow
+  refusal, insert/read round-trip through the uniform cache contract;
+* the headline invariant: with SC-GEMM enabled, continuous-batching token
+  streams are **bit-identical** to the sequential per-request
+  ``launch.serve.generate`` baseline for all three model families;
+* scheduling: a mixed-length 8-request workload finishes in strictly fewer
+  batched decode steps under continuous batching than static batching;
+* eviction-on-EOS: streams truncate exactly where the sequential stream
+  first emits the EOS id.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.launch.serve import generate
+from repro.models import bind
+from repro.models.cache_ops import slot_insert, slot_read
+from repro.serving import Engine, Request, RequestQueue, SlotEntry, SlotPool
+
+
+def _cfg(family, **kw):
+    base = dict(name=f"srv-{family}", family=family, n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+                dtype="float32", q_block=16, kv_block=16, loss_chunk=16,
+                remat=False, use_sc_gemm=True)
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+CASES = [
+    _cfg("dense"),
+    _cfg("ssm", n_kv_heads=1, d_ff=0, ssm_state=16, ssm_headdim=16,
+         ssm_chunk=4),
+    _cfg("hybrid", n_kv_heads=4, ssm_state=16, ssm_headdim=16, ssm_chunk=4,
+         shared_attn_every=2, n_layers=4),
+]
+
+
+def _params(cfg):
+    return bind(cfg).init_params(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, n, s=8, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(s,)).astype(np.int32)
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------- slot pool
+
+def test_slot_pool_admit_evict_reuse():
+    cfg = CASES[0]
+    m = bind(cfg)
+    pool = SlotPool(m, capacity=2, max_seq=12)
+    params = _params(cfg)
+    prefill = lambda p: m.prefill_step(params, {"tokens": jnp.asarray(p)[None]})
+
+    def entry(uid, gen=2):
+        return SlotEntry(request=Request(uid=uid, prompt=_prompts(cfg, 1)[0],
+                                         max_new_tokens=gen),
+                         admitted_at=0.0, admit_step=0)
+
+    _, c0 = prefill(_prompts(cfg, 1)[0])
+    s0 = pool.admit(entry("a"), c0)
+    s1 = pool.admit(entry("b"), c0)
+    assert {s0, s1} == {0, 1} and not pool.has_free and len(pool) == 2
+    with pytest.raises(RuntimeError, match="full"):
+        pool.admit(entry("c"), c0)
+
+    # eviction zeroes the slot and hands back the lowest index first
+    pool.evict(s0)
+    assert pool.has_free and pool.positions()[s0] == 0
+    assert pool.admit(entry("d"), c0) == s0          # reuse after eviction
+    # over-length requests are refused before touching device state
+    pool.evict(s0)
+    with pytest.raises(ValueError, match="max_seq"):
+        pool.admit(entry("e", gen=100), c0)
+    assert pool.has_free                             # refusal kept the slot
+
+
+def test_slot_insert_read_roundtrip_all_families():
+    """insert -> read recovers the single-sequence cache (up to the pool's
+    longer, zero-padded sequence axis) for every family: the uniform
+    contract the engine rests on."""
+    for cfg in CASES:
+        m = bind(cfg)
+        params = _params(cfg)
+        tokens = jnp.asarray(_prompts(cfg, 1)[0])[None]
+        _, single = m.prefill_step(params, {"tokens": tokens})
+        pool = m.init_cache(3, 12)
+        pool = slot_insert(pool, single, 1)
+        back = m.cache_read(pool, 1)
+        flat_s, _ = jax.tree_util.tree_flatten(single)
+        flat_b, _ = jax.tree_util.tree_flatten(back)
+        for s, b in zip(flat_s, flat_b):
+            if s.ndim == 1:                      # pos vector
+                np.testing.assert_array_equal(np.asarray(s), np.asarray(b))
+                continue
+            sl = tuple(slice(0, e) for e in s.shape)
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(b[sl]))
+            # the tail beyond the inserted extents stays zero
+            assert float(jnp.abs(b).sum()) == pytest.approx(
+                float(jnp.abs(b[sl]).sum()))
+
+
+def test_engine_rejects_oversized_request_before_any_work():
+    """An unfittable request fails at run() entry — before prefill, before
+    queueing — so it can never abort a run mid-flight and discard finished
+    streams; the engine stays usable afterwards."""
+    cfg = CASES[0]
+    engine = Engine(cfg, _params(cfg), capacity=1, max_seq=10)
+    good = Request(uid="fits", prompt=_prompts(cfg, 1)[0], max_new_tokens=2)
+    bad = Request(uid="big", prompt=_prompts(cfg, 1)[0], max_new_tokens=99)
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.run([good, bad])
+    assert not engine.queue and not engine.pool.entries
+    assert engine.run([good])[0].n_generated == 2
+
+
+def test_request_queue_fcfs_and_duplicate_uid():
+    q = RequestQueue([Request(uid="a", prompt=np.ones(4, np.int32),
+                              max_new_tokens=1)])
+    q.submit(Request(uid="b", prompt=np.ones(4, np.int32), max_new_tokens=1))
+    with pytest.raises(ValueError, match="duplicate"):
+        q.submit(Request(uid="a", prompt=np.ones(4, np.int32),
+                         max_new_tokens=1))
+    assert q.pop().uid == "a" and q.pop().uid == "b" and not q
+
+
+# ------------------------------------------------- bit-identical decoding
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+def test_engine_streams_bit_identical_to_sequential(cfg):
+    """Continuous batching (capacity 2, SC-GEMM on) reproduces the
+    sequential per-request baseline exactly — token-for-token — while
+    co-batching requests admitted at different times."""
+    params = _params(cfg)
+    prompts = _prompts(cfg, 5)
+    gens = [3, 7, 2, 5, 4]
+    baseline = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                    gen_tokens=g))[0]
+                for p, g in zip(prompts, gens)]
+
+    engine = Engine(cfg, params, capacity=2, max_seq=8 + max(gens))
+    results = engine.run([Request(uid=f"r{i}", prompt=p, max_new_tokens=g)
+                          for i, (p, g) in enumerate(zip(prompts, gens))])
+    for res, ref in zip(results, baseline):
+        np.testing.assert_array_equal(res.tokens, ref,
+                                      err_msg=f"{cfg.name}/{res.uid}")
+        assert res.finished_reason == "length"
+    # slots really were shared: fewer decode steps than sequential's total
+    assert engine.stats["decode_steps"] < sum(g - 1 for g in gens)
+
+
+def test_engine_eos_eviction_matches_truncated_baseline():
+    """EOS eviction: pick the baseline's 3rd token as the EOS id — the
+    engine must emit the identical prefix and stop there, freeing the slot
+    for the next request."""
+    cfg = CASES[0]
+    params = _params(cfg)
+    prompts = _prompts(cfg, 2, seed=3)
+    full = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                gen_tokens=8))[0] for p in prompts]
+    eos = int(full[0][2])
+
+    engine = Engine(cfg, params, capacity=1, max_seq=16)
+    results = engine.run([
+        Request(uid="eos", prompt=prompts[0], max_new_tokens=8, eos_id=eos),
+        Request(uid="tail", prompt=prompts[1], max_new_tokens=8),
+    ])
+    cut = int(np.argmax(full[0] == eos)) + 1
+    np.testing.assert_array_equal(results[0].tokens, full[0][:cut])
+    assert results[0].finished_reason == "eos"
+    np.testing.assert_array_equal(results[1].tokens, full[1])
+
+
+# --------------------------------------------------------- scheduling A/B
+
+def test_mixed_workload_fewer_steps_than_static():
+    """Acceptance: an 8-request mixed-length workload drains in strictly
+    fewer batched decode steps under continuous batching than static
+    batching, with identical streams from both modes."""
+    cfg = dataclasses.replace(CASES[0], use_sc_gemm=False)
+    params = _params(cfg)
+    prompts = _prompts(cfg, 8, seed=5)
+    gens = [2, 12, 3, 12, 2, 12, 3, 12]
+
+    def reqs():
+        return [Request(uid=f"r{i}", prompt=p, max_new_tokens=g)
+                for i, (p, g) in enumerate(zip(prompts, gens))]
+
+    cont = Engine(cfg, params, capacity=4, max_seq=24, continuous=True)
+    r_cont = cont.run(reqs())
+    stat = Engine(cfg, params, capacity=4, max_seq=24, continuous=False)
+    r_stat = stat.run(reqs())
+
+    assert cont.stats["decode_steps"] < stat.stats["decode_steps"], (
+        cont.stats, stat.stats)
+    for a, b in zip(r_cont, r_stat):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert cont.stats["generated_tokens"] == sum(gens)
