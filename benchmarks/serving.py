@@ -1,6 +1,7 @@
 """Serving-engine benchmark: continuous vs static batching on a synthetic
-mixed-length workload, recording tok/s, p50/p99 request latency, and decode
-steps into the ``BENCH_serving.json`` trajectory.
+mixed-length workload, recording tok/s, p50/p99 request latency, decode
+steps, and paged-cache page usage into the ``BENCH_serving.json``
+trajectory.
 
     PYTHONPATH=src python -m benchmarks.serving [--smoke] [--json PATH]
 
@@ -8,7 +9,14 @@ Rows encode throughput as ``us_per_call`` = µs per *generated token*
 (1e6 / tok/s), so ``benchmarks.check_regression`` gates a >2x tok/s drop with
 the exact machinery that gates the SC-GEMM kernel rows: lower is better,
 matching-signature baselines, noise floor. ``derived`` carries the human
-numbers (tok/s, latency percentiles, decode steps).
+numbers (tok/s, latency percentiles, decode steps, pages in use).
+
+A second, gate-exempt marker row records the **long-tail acceptance**
+(ISSUE 4 / DESIGN.md §8): a workload whose tail request exceeds the
+per-slot stripe of a contiguous pool under a fixed token budget — the
+contiguous engine must refuse it with ``PoolExhausted`` while the paged
+engine drains it inside the same budget by giving the tail many pages and
+the short requests few.
 
 The workload is deterministic (fixed seeds, greedy sampling) and each mode
 is measured on its second run — the first run pays XLA compilation for the
@@ -70,6 +78,10 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
             engine.run(_requests(cfg, n, prompt_len, max_gen))
             st = engine.stats
         stats[mode] = st
+        pages = (f" peak_pages={st['peak_pages']}/{st['n_blocks']}"
+                 f" block={st['block']}"
+                 f" preemptions={st['preemptions']}"
+                 if st.get("layout") == "paged" else "")
         rows.append({
             "name": f"serving/{mode}/{cfg.name}",
             "us_per_call": round(1e6 / st["tok_per_s"], 1),
@@ -78,7 +90,7 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                         f" p99_ms={st['p99_latency_s'] * 1e3:.0f}"
                         f" decode_steps={st['decode_steps']}"
                         f" requests={st['requests']}"
-                        f" capacity={capacity}"),
+                        f" capacity={capacity}{pages}"),
         })
     # scheduling quality marker (us_per_call=0 rows are gate-exempt): the
     # whole point of the engine — same workload, fewer batched decode steps
@@ -90,7 +102,61 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                     f" static={stat['decode_steps']}"
                     f" ratio={cont['decode_steps'] / max(stat['decode_steps'], 1):.2f}"),
     })
+    rows.append(_longtail_row(cfg, params, mesh, capacity, prompt_len,
+                              max_gen))
     return rows
+
+
+def _longtail_row(cfg, params, mesh, capacity: int, prompt_len: int,
+                  max_gen: int) -> dict:
+    """Long-tail acceptance under one shared token budget (gate-exempt
+    marker row): the contiguous pool (per-slot stripe = budget / capacity)
+    must refuse the tail request; the paged pool must drain everything
+    without ever holding more pages than the budget."""
+    from repro.serving import Engine, PoolExhausted, Request
+
+    stripe = prompt_len + max_gen
+    budget_tokens = capacity * stripe
+    block = max(stripe // 4, 1)
+    long_gen = 2 * stripe - prompt_len          # needs 2 stripes of cache
+    shape = ((prompt_len, cfg.n_codebooks) if cfg.n_codebooks
+             else (prompt_len,))
+
+    def requests():
+        rng = np.random.default_rng(11)
+        return [Request(uid=f"tail-{i}",
+                        prompt=rng.integers(0, cfg.vocab_size, size=shape,
+                                            dtype=np.int32),
+                        max_new_tokens=(long_gen if i == 0
+                                        else max(max_gen // 4, 1)))
+                for i in range(capacity + 2)]
+
+    contiguous = Engine(cfg, params, capacity=capacity, max_seq=stripe,
+                        mesh=mesh, paged=False)
+    try:
+        contiguous.run(requests())
+        contiguous_out = "UNEXPECTEDLY-FIT"
+    except PoolExhausted:
+        contiguous_out = "PoolExhausted"
+
+    paged = Engine(cfg, params, capacity=capacity, max_seq=2 * stripe,
+                   mesh=mesh, paged=True, block=block,
+                   n_blocks=budget_tokens // block)
+    results = paged.run(requests())
+    st = paged.stats
+    drained = all(r.n_generated == r_req.max_new_tokens
+                  for r, r_req in zip(results, requests()))
+    return {
+        "name": f"serving/longtail/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (f"contiguous={contiguous_out}"
+                    f" paged={'drained' if drained else 'INCOMPLETE'}"
+                    f" budget_tokens={budget_tokens}"
+                    f" peak_pages={st['peak_pages']}/{st['n_blocks']}"
+                    f" block={st['block']}"
+                    f" preemptions={st['preemptions']}"
+                    f" decode_steps={st['decode_steps']}"),
+    }
 
 
 def main() -> None:

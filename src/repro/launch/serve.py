@@ -90,6 +90,16 @@ def main() -> None:
     ap.add_argument("--no-continuous", action="store_true",
                     help="static batching A/B: admit in gangs, every request "
                          "waits for the gang's slowest")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="contiguous slot stripes A/B: every slot reserves a "
+                         "full max_seq stripe instead of paged blocks")
+    ap.add_argument("--block", type=int, default=64,
+                    help="paged cache page size in tokens (DESIGN.md §8)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged cache page budget (n_blocks); default "
+                         "capacity * ceil(max_seq / block), i.e. no "
+                         "oversubscription — set lower to trade preemptions "
+                         "for memory")
     ap.add_argument("--sc-gemm", action="store_true",
                     help="serve through the SC-GEMM numeric (inference "
                          "emulation of the paper's multiplier)")
@@ -120,17 +130,22 @@ def main() -> None:
 
     engine = Engine(cfg, params, capacity=args.capacity,
                     max_seq=args.prompt_len + args.gen,
-                    continuous=not args.no_continuous)
+                    continuous=not args.no_continuous,
+                    paged=not args.no_paged, block=args.block,
+                    n_blocks=args.pages)
     t0 = time.time()
     results = engine.run(requests)
     dt = time.time() - t0
     st = engine.stats
-    print(f"[serve] {st['mode']}: {st['requests']} requests, "
+    pages = (f", pages peak {st['peak_pages']}/{st['n_blocks']}"
+             f" (block {st['block']}, {st['preemptions']} preemptions)"
+             if st["layout"] == "paged" else "")
+    print(f"[serve] {st['mode']}/{st['layout']}: {st['requests']} requests, "
           f"{st['generated_tokens']} tokens in {dt:.1f}s "
           f"({st['tok_per_s']:.1f} tok/s incl. compile), "
           f"{st['decode_steps']} decode steps, "
           f"p50 {st['p50_latency_s'] * 1e3:.0f}ms "
-          f"p99 {st['p99_latency_s'] * 1e3:.0f}ms")
+          f"p99 {st['p99_latency_s'] * 1e3:.0f}ms{pages}")
     print(f"[serve] first stream: {results[0].tokens[:16]}")
 
 

@@ -20,10 +20,11 @@ from repro.optim.adamw import Quantized8
 from repro.optim.schedules import warmup_cosine
 from repro.parallel.context import activation_sharding_scope
 from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
-                                     param_pspecs)
+                                     paged_pool_pspecs, param_pspecs)
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
-           "cached_prefill_step", "cached_decode_step",
+           "build_paged_decode_step", "cached_prefill_step",
+           "cached_decode_step", "cached_paged_decode_step",
            "abstract_params", "abstract_opt_state", "activation_spec",
            "opt_pspecs"]
 
@@ -200,6 +201,56 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
     return jitted, shardings, params_abs
 
 
+def build_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                            block: int, n_blocks: int, max_blocks: int):
+    """Decode step over a *paged* slot pool (DESIGN.md §8). Signature:
+    ``decode(params, data, tables, batch) -> (logits, data)`` where ``data``
+    is the ``cache_ops.paged_init`` pytree and ``tables`` the
+    ``(capacity, max_blocks)`` int32 block-table array.
+
+    The family decode math is reused verbatim: pages are gathered into the
+    dense per-slot view, ``m.decode_step`` runs unchanged, and the one token
+    it appended per slot is scattered back into its page — so paged streams
+    are bit-identical to the contiguous layout by construction. One compiled
+    executable per (cfg, mesh, capacity, block, n_blocks, max_blocks): the
+    block *shape* is static, the table *contents* are a runtime input, so
+    page churn never recompiles.
+    """
+    from repro.models import cache_ops
+    m = bind(cfg)
+
+    def decode(params, data, tables, batch):
+        dense = cache_ops.paged_gather(data, tables, block=block)
+        logits, dense2 = m.decode_step(params, dense, batch)
+        return logits, cache_ops.paged_commit(data, dense2, tables,
+                                              block=block)
+
+    params_abs = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    data_abs = jax.eval_shape(
+        lambda: cache_ops.paged_init(m.init_cache, capacity, n_blocks, block))
+    data_sh = named(mesh, paged_pool_pspecs(cfg, data_abs, mesh))
+    data = _data_axes(mesh)
+    from repro.parallel.sharding import fit_spec
+    if cfg.n_codebooks:
+        logits_shape = (capacity, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        logits_shape = (capacity, 1, cfg.vocab_size)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(*((data,) + (None,) * (len(logits_shape) - 1))),
+                       logits_shape, mesh))
+    shardings = {
+        "params": named(mesh, p_specs),
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
+        "cache": data_sh,
+        "tables": NamedSharding(mesh, P(None, None)),   # tiny; replicated
+    }
+    # data donation aliases in/out (same shardings) — the decode steady state
+    jitted = jax.jit(decode, donate_argnums=(1,),
+                     out_shardings=(logits_sh, data_sh))
+    return jitted, shardings, params_abs
+
+
 # Compiled-step reuse: a serving engine admits requests one at a time, and a
 # naive driver that rebuilds its jitted closures per request (the old
 # serve.py::generate) throws away XLA's executable cache on every call.
@@ -219,3 +270,13 @@ def cached_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
                        seq_len: int):
     return build_decode_step(cfg, mesh, batch_size=batch_size,
                              seq_len=seq_len)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                             block: int, n_blocks: int, max_blocks: int):
+    """Memoized on the *block shape* (capacity, block, n_blocks, max_blocks):
+    engines serving the same paged configuration share one executable; table
+    contents and page churn are runtime inputs."""
+    return build_paged_decode_step(cfg, mesh, capacity=capacity, block=block,
+                                   n_blocks=n_blocks, max_blocks=max_blocks)

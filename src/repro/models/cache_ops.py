@@ -19,16 +19,40 @@ A single-sequence cache (from a B=1 prefill) may have a *shorter* sequence
 axis than the pool — ``slot_insert`` writes it as a prefix and
 ``decode_attention`` masks the unfilled tail, so per-request prefill caches
 drop into a long-lived pool without reshaping.
+
+**Paged layout** (DESIGN.md §8): the ``paged_*`` functions below replace the
+per-slot contiguous sequence stripe with a shared block pool. Leaves are
+split into two classes:
+
+* *sequence leaves* — anything under a ``k``/``v`` field (attention KV, the
+  only leaves with a per-token sequence axis). In the paged pool they are
+  stored as ``(lead, n_blocks + 1, block, *tail)``: axis 1 indexes physical
+  pages of ``block`` tokens; the last page is a write-off **trash block**
+  that absorbs scatters from free slots and is never handed out.
+* *slot leaves* — everything else (SSM state, conv window, ``pos``): O(1)
+  per sequence, so they keep the contiguous slot layout ``(lead, capacity,
+  *tail)``.
+
+A per-slot **block table** ``(capacity, max_blocks) int32`` maps logical
+page index → physical page id, with ``-1`` marking an unallocated page
+(reads redirect to the trash block, whose contents are always masked by the
+per-row position mask). ``paged_gather`` materializes the dense per-slot
+view the family decode steps already consume, and ``paged_commit`` scatters
+the one token each decode step appends back into its page — so the decode
+numerics are untouched and streams stay bit-identical to the contiguous
+layout (the invariant tests/test_paging.py fuzzes).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
-           "SLOT_AXIS"]
+           "paged_init", "paged_gather", "paged_commit", "paged_insert",
+           "paged_evict", "paged_read", "SLOT_AXIS", "SEQ_FIELDS"]
 
 #: The slot (batch) dimension of every non-``pos`` cache leaf.
 SLOT_AXIS = 1
@@ -36,11 +60,23 @@ SLOT_AXIS = 1
 #: Name of the per-sequence position field in every family's cache.
 _POS_FIELD = "pos"
 
+#: Field names whose leaves carry a per-token sequence axis (axis 2) and are
+#: therefore paged; every other leaf is O(1) per sequence and stays
+#: slot-indexed. All three family caches route attention KV through fields
+#: with exactly these names (``cache_pspecs`` relies on the same contract).
+SEQ_FIELDS = ("k", "v")
+
+
+def _entry_name(entry) -> str:
+    return str(getattr(entry, "name", getattr(entry, "key", None)))
+
 
 def _is_pos(path: tuple) -> bool:
-    last = path[-1]
-    name = getattr(last, "name", getattr(last, "key", None))
-    return str(name) == _POS_FIELD
+    return _entry_name(path[-1]) == _POS_FIELD
+
+
+def _is_seq(path: tuple) -> bool:
+    return any(_entry_name(p) in SEQ_FIELDS for p in path)
 
 
 def _check_rank(leaf) -> None:
@@ -107,3 +143,162 @@ def slot_evict(pool: Any, slot) -> Any:
 def slot_positions(pool: Any) -> jax.Array:
     """The pool's per-slot ``(B,)`` position vector."""
     return pool.pos
+
+
+# --------------------------------------------------------------------------
+# Paged block-pool layout (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _trash(leaf) -> int:
+    """Physical index of the leaf's trash block (always the last page)."""
+    return leaf.shape[SLOT_AXIS] - 1
+
+
+def _safe_tables(tables: jax.Array, leaf) -> jax.Array:
+    """Block tables with unallocated (-1) entries redirected to the trash
+    block, so gathers stay in-bounds and scatters from free slots never land
+    in a live page."""
+    return jnp.where(tables < 0, _trash(leaf), tables)
+
+
+def paged_init(init_cache: Callable[[int, int], Any], capacity: int,
+               n_blocks: int, block: int) -> Any:
+    """A paged pool cache for a family whose ``init_cache(batch, max_seq)``
+    builds the contiguous layout.
+
+    Sequence leaves come out as ``(lead, n_blocks + 1, block, *tail)`` (the
+    ``+ 1`` is the trash block); slot leaves as ``(lead, capacity, *tail)``.
+    The result is *not* a valid dense family cache — ``paged_gather`` makes
+    one on demand.
+    """
+    if n_blocks < 1 or block < 1 or capacity < 1:
+        raise ValueError(
+            f"paged pool needs capacity/n_blocks/block ≥ 1, got "
+            f"{capacity}/{n_blocks}/{block}")
+    by_block = init_cache(n_blocks + 1, block)
+    by_slot = init_cache(capacity, block)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, blk, slot: blk if _is_seq(path) else slot,
+        by_block, by_slot)
+
+
+def paged_gather(data: Any, tables: jax.Array, *, block: int) -> Any:
+    """Materialize the dense per-slot family cache the decode steps consume.
+
+    Each slot's pages are gathered in logical order and flattened into a
+    contiguous sequence axis of ``max_blocks * block`` positions. Positions
+    past a slot's ``pos`` (unallocated pages → trash block) carry garbage,
+    exactly like the zero tail of the contiguous layout — the per-row
+    position mask in decode attention excludes them *exactly* (softmax of a
+    ``-1e30`` logit underflows to 0.0 in fp32), which is what keeps paged
+    streams bit-identical. Safe under ``jit`` with ``tables`` traced.
+    """
+    capacity, max_blocks = tables.shape
+
+    def one(path, leaf):
+        if _is_pos(path) or not _is_seq(path):
+            return leaf
+        safe = _safe_tables(tables, leaf)                 # (C, MB)
+        gathered = leaf[:, safe]                  # (lead, C, MB, blk, *tail)
+        return gathered.reshape(leaf.shape[0], capacity, max_blocks * block,
+                                *leaf.shape[2 + 1:])
+
+    return jax.tree_util.tree_map_with_path(one, data)
+
+
+def paged_commit(data: Any, dense: Any, tables: jax.Array, *,
+                 block: int) -> Any:
+    """Fold one decode step's updates from the dense view back into pages.
+
+    A decode step appends exactly one token per slot: for sequence leaves
+    only the column at each slot's pre-step position changed, so that single
+    token is scattered to ``(tables[slot, pos // block], pos % block)``.
+    Slot leaves (SSM state, conv, ``pos``) are adopted wholesale from
+    ``dense`` — their layout is identical in both views. Free slots (table
+    entry -1) scatter into the trash block; duplicate trash writes race but
+    trash contents are never read unmasked.
+    """
+    capacity, max_blocks = tables.shape
+    wpos = jnp.asarray(data.pos, jnp.int32)               # pre-step positions
+    page_ix = jnp.clip(wpos // block, 0, max_blocks - 1)
+    entry = jnp.take_along_axis(tables, page_ix[:, None], axis=1)[:, 0]
+    off = wpos % block
+    rows = jnp.arange(capacity)
+
+    def one(path, pl, dl):
+        if _is_pos(path) or not _is_seq(path):
+            return dl
+        bid = jnp.where(entry < 0, _trash(pl), entry)     # (C,)
+        col = jnp.minimum(wpos, dl.shape[2] - 1)
+        token = dl[:, rows, col]                          # (lead, C, *tail)
+        return pl.at[:, bid, off].set(token.astype(pl.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, data, dense)
+
+
+def paged_insert(data: Any, single: Any, slot: int,
+                 pages: np.ndarray | list[int], *, block: int) -> Any:
+    """Write a single-sequence (B=1) prefill cache into ``pages`` of the
+    paged pool and ``slot`` of the slot leaves.
+
+    ``pages`` must hold ``ceil(S1 / block)`` physical page ids (host ints —
+    page allocation is host-driven); the last page's tail beyond ``S1`` is
+    zero-padded. Returns the new pool pytree.
+    """
+    pages = jnp.asarray(np.asarray(pages, np.int32))
+    n_pages = int(pages.shape[0])
+
+    def one(path, pl, sl):
+        if _is_pos(path):
+            return pl.at[slot].set(jnp.reshape(sl, (-1,))[0])
+        if not _is_seq(path):
+            _check_rank(pl)
+            start = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) \
+                + (jnp.zeros((), jnp.int32),) * (pl.ndim - 2)
+            return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype), start)
+        lead, s1 = sl.shape[0], sl.shape[2]
+        if n_pages * block < s1:
+            raise ValueError(
+                f"{n_pages} pages of {block} tokens cannot hold a "
+                f"{s1}-token prefill cache")
+        x = sl[:, 0]                                      # (lead, S1, *tail)
+        pad = n_pages * block - s1
+        if pad:
+            x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        x = x.reshape(lead, n_pages, block, *x.shape[2:])
+        return pl.at[:, pages].set(x.astype(pl.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, data, single)
+
+
+def paged_evict(data: Any, slot: int, pages: np.ndarray | list[int]) -> Any:
+    """Zero ``slot``'s slot leaves and its ``pages``, reset its position.
+
+    Zeroing freed pages keeps pool contents a pure function of the live
+    requests (same argument as :func:`slot_evict`) — a reused page never
+    leaks a previous tenant's KV into debugging dumps, even though the
+    position mask already keeps it out of the math.
+    """
+    pages = np.asarray(pages, np.int32)
+
+    def one(path, pl):
+        if _is_pos(path):
+            return pl.at[slot].set(0)
+        if not _is_seq(path):
+            _check_rank(pl)
+            return pl.at[:, slot].set(jnp.zeros_like(pl[:, slot]))
+        if pages.size == 0:
+            return pl
+        ids = jnp.asarray(pages)
+        return pl.at[:, ids].set(jnp.zeros_like(pl[:, ids]))
+
+    return jax.tree_util.tree_map_with_path(one, data)
+
+
+def paged_read(data: Any, tables: jax.Array, slot: int, *,
+               block: int) -> Any:
+    """Extract ``slot`` as a single-sequence (B=1) dense cache (sequence
+    extent ``max_blocks * block``, unallocated tail zero for freshly
+    evicted pages / trash garbage otherwise). Test/debug surface — the
+    decode path gathers all slots at once."""
+    return slot_read(paged_gather(data, tables, block=block), slot)

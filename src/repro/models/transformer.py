@@ -163,12 +163,16 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
         # decode: write this token's K/V at each sequence's own position.
         # ``cache_pos: (B,)`` — per-sequence absolute positions, so sequences
         # admitted at different times (serving slot pool, DESIGN.md §7) share
-        # one batched step.
+        # one batched step. The cache rows may be a paged-gather view
+        # (DESIGN.md §8) whose sequence extent is a page-count multiple, not
+        # max_seq; mode="drop" makes the free-slot behaviour explicit — an
+        # idle serving slot's position can drift past the view and its
+        # write must vanish rather than clamp onto a live row's tail.
         k_cache, v_cache = cache
         cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
         batch_idx = jnp.arange(b)
-        k_cache = k_cache.at[batch_idx, cache_pos].set(k[:, 0])
-        v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0])
+        k_cache = k_cache.at[batch_idx, cache_pos].set(k[:, 0], mode="drop")
+        v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0], mode="drop")
         out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
                                window=window, logit_softcap=cfg.attn_softcap)
         new_cache = (k_cache, v_cache)

@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 __all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "slot_pool_pspecs",
-           "named", "DATA_AXES"]
+           "paged_pool_pspecs", "named", "DATA_AXES"]
 
 DATA_AXES = ("pod", "data")          # batch / FSDP axes (pod may be absent)
 
@@ -235,6 +235,43 @@ def slot_pool_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh, *,
     keeps local to the shard that owns the slot.
     """
     return cache_pspecs(cfg, cache, mesh, batch_size=capacity)
+
+
+def paged_pool_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh) -> Any:
+    """Cache pspecs for a *paged* serving pool (DESIGN.md §8).
+
+    Sequence (k/v) leaves are ``(lead, n_blocks + 1, block, KV, hd)``: the
+    page axis stays **unsharded** — page allocation is host-driven (the
+    engine's free list hands out arbitrary physical ids), so pages must stay
+    addressable from the host exactly like slots in the contiguous pool
+    (ROADMAP's multi-host item covers lifting both). TP instead shards KV
+    heads — or head_dim when the head count doesn't divide the model axis —
+    so every page splits the same way and gather/scatter through the block
+    table stays shard-local along the model axis. Slot leaves (SSM state /
+    conv) likewise keep the slot axis unsharded and shard channels over
+    ``model``.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    kv_shardable = cfg.n_kv_heads % model_size == 0
+
+    def spec(path, leaf):
+        name = _key_of(path[-1])
+        if leaf.ndim == 0 or name == "pos":
+            return P()
+        if name in ("k", "v") or (len(path) >= 2
+                                  and _key_of(path[-2]) in ("k", "v")):
+            raw = P(None, None, None, "model", None) if kv_shardable \
+                else P(None, None, None, None, "model")
+        elif name == "state":                    # mamba (L, C, H, P, N)
+            raw = P(None, None, "model")
+        elif name == "conv":                     # (L, C, width, channels)
+            raw = P(None, None, None, "model")
+        else:
+            raw = P()
+        return fit_spec(raw, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
 
 
 def named(mesh: Mesh, pspecs: Any) -> Any:

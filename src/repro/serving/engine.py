@@ -1,28 +1,39 @@
-"""Continuous-batching serving engine (DESIGN.md §7).
+"""Continuous-batching serving engine (DESIGN.md §7–§8).
 
-The loop: **admit → decode → evict**, repeated until queue and pool drain.
+The loop: **admit → grow → decode → evict**, repeated until queue and pool
+drain.
 
-* *Admit (prefill-on-admit)*: while a slot is free and a request waits, run
-  a B=1 prefill through the mesh-sharded ``launch.steps.cached_prefill_step``
-  (one compiled executable per prompt length, reused across requests), sample
-  the first token from its logits, and insert the prefilled cache into the
-  slot pool.
-* *Decode (batched)*: one ``cached_decode_step`` call advances *all* live
+* *Admit (prefill-on-admit)*: while a slot (and, in paged mode, enough pages
+  for the prompt) is free and a request waits, run a B=1 prefill through the
+  mesh-sharded ``launch.steps.cached_prefill_step`` (one compiled executable
+  per prompt length, reused across requests), sample the first token from
+  its logits, and insert the prefilled cache into the slot pool. Paged
+  admission reserves pages *lazily* — just the prompt's worth.
+* *Grow (paged only)*: before each decode step, every live slot's next write
+  position must map to an allocated page (``PagedSlotPool.ensure_page``).
+  When the page pool is exhausted the engine applies **backpressure**: the
+  youngest live slot is preempted — evicted with its pages returned and its
+  request re-queued at the front — rather than crashing. Greedy/per-request
+  PRNG sampling makes a restarted request regenerate the identical stream.
+* *Decode (batched)*: one ``cached_paged_decode_step`` (or
+  ``cached_decode_step`` for the contiguous pool) call advances *all* live
   slots a token. Slots sit at different absolute positions — the per-slot
   ``pos`` vector in every family cache makes that well-defined — and the
   decode-shaped (M = capacity, S = 1) SC-GEMMs resolve to the skinny
   autotune bucket (``kernels.autotune.bucket_m``) instead of prefill tiles.
-* *Evict*: a request leaves on EOS or length; its slot is zeroed and free
-  for the next admission *on the same step* — no request ever waits for a
-  stranger's tail.
+* *Evict*: a request leaves on EOS or length; its slot (and pages) are
+  zeroed and free for the next admission *on the same step* — no request
+  ever waits for a stranger's tail.
 
 Determinism invariant: with SC-GEMM enabled, the engine's per-request token
 streams are **bit-identical** to the sequential per-request
-``launch.serve.generate`` baseline, for every family. Three properties
-compose into that guarantee: deterministic SC streams are count-exact
-(PAPER.md — no LFSR state to perturb), ``sc_dense`` quantizes activations
-per-row (a token's counts never depend on batch neighbours), and per-slot
-positions reproduce exactly the sequential cache layout. Static batching
+``launch.serve.generate`` baseline, for every family, in both cache
+layouts. Three properties compose into that guarantee: deterministic SC
+streams are count-exact (PAPER.md — no LFSR state to perturb), ``sc_dense``
+quantizes activations per-row (a token's counts never depend on batch
+neighbours), and per-slot positions reproduce exactly the sequential cache
+layout — paged gathers only append position-masked garbage past each row's
+``pos``, which the decode attention mask excludes exactly. Static batching
 (``continuous=False``) keeps the same math and admits in gangs — the A/B
 baseline for scheduling, not numerics.
 """
@@ -36,11 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.launch.steps import cached_decode_step, cached_prefill_step
-from repro.models import bind
+from repro.launch.steps import (cached_decode_step, cached_paged_decode_step,
+                                cached_prefill_step)
+from repro.models import bind, cache_ops
 
 from .queue import Request, RequestQueue, RequestResult
-from .slots import SlotEntry, SlotPool
+from .slots import PagedSlotPool, PoolExhausted, SlotEntry, SlotPool
 
 __all__ = ["Engine", "default_serving_mesh"]
 
@@ -56,29 +68,54 @@ class Engine:
     """Slot-pool serving engine over one bound model.
 
     ``capacity`` is the decode batch (slot count); ``max_seq`` bounds
-    ``prompt + max_new`` per request. ``continuous=False`` degrades to
-    static batching: a gang of requests is admitted only into an *empty*
-    pool and the next gang waits until every member finished — the
-    every-request-waits-for-the-slowest behaviour continuous batching
-    removes.
+    ``prompt + max_new`` per request. ``paged=True`` (the default) backs the
+    pool with shared pages of ``block`` tokens under a total budget of
+    ``n_blocks`` pages (default ``capacity · ceil(max_seq / block)``, i.e.
+    no oversubscription); a tighter budget admits mixed-length traffic the
+    contiguous pool cannot hold, trading occasional preemption.
+    ``paged=False`` keeps the PR 3 contiguous stripe pool (the memory A/B).
+    ``continuous=False`` degrades to static batching: a gang of requests is
+    admitted only into an *empty* pool and the next gang waits until every
+    member finished — the every-request-waits-for-the-slowest behaviour
+    continuous batching removes.
     """
 
     def __init__(self, cfg, params, *, capacity: int = 4, max_seq: int = 256,
-                 mesh: Mesh | None = None, continuous: bool = True):
+                 mesh: Mesh | None = None, continuous: bool = True,
+                 paged: bool = True, block: int = 64,
+                 n_blocks: int | None = None):
         cfg.validate()
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
         self.continuous = continuous
+        self.paged = paged
         self.mesh = mesh if mesh is not None else default_serving_mesh()
         self._m = bind(cfg)
 
-        self._decode, shardings, _ = cached_decode_step(
-            cfg, self.mesh, batch_size=capacity, seq_len=max_seq)
-        self._params = jax.device_put(params, shardings["params"])
-        pool_cache = jax.device_put(self._m.init_cache(capacity, max_seq),
-                                    shardings["cache"])
-        self.pool = SlotPool(self._m, capacity, max_seq, cache=pool_cache)
+        if paged:
+            # one derivation (PagedSlotPool.plan) shapes both the compiled
+            # step and the pool's host bookkeeping — they must never diverge
+            block, max_blocks, n_blocks = PagedSlotPool.plan(
+                capacity, max_seq, block, n_blocks)
+            self._decode, shardings, _ = cached_paged_decode_step(
+                cfg, self.mesh, capacity=capacity, block=block,
+                n_blocks=n_blocks, max_blocks=max_blocks)
+            self._params = jax.device_put(params, shardings["params"])
+            data = jax.device_put(
+                cache_ops.paged_init(self._m.init_cache, capacity, n_blocks,
+                                     block),
+                shardings["cache"])
+            self.pool: Any = PagedSlotPool(self._m, capacity, max_seq,
+                                           block=block, n_blocks=n_blocks,
+                                           cache=data)
+        else:
+            self._decode, shardings, _ = cached_decode_step(
+                cfg, self.mesh, batch_size=capacity, seq_len=max_seq)
+            self._params = jax.device_put(params, shardings["params"])
+            pool_cache = jax.device_put(
+                self._m.init_cache(capacity, max_seq), shardings["cache"])
+            self.pool = SlotPool(self._m, capacity, max_seq, cache=pool_cache)
 
         tok_shape = ((capacity, 1, cfg.n_codebooks) if cfg.n_codebooks
                      else (capacity, 1))
@@ -87,6 +124,8 @@ class Engine:
         self.stats: dict[str, Any] = {}
         self._step = 0          # decode-step counter (admissions are free)
         self._n_prefills = 0
+        self._n_preemptions = 0
+        self._admit_counter = 0
 
     # ------------------------------------------------------------ plumbing
 
@@ -106,7 +145,8 @@ class Engine:
         Greedy is pure argmax. temperature > 0 walks a per-request PRNG
         chain (seeded by the request, split once per emitted token), so a
         stream is a function of the request alone — which slot or engine
-        step produced it is irrelevant.
+        step produced it is irrelevant (and a preempted, restarted request
+        regenerates the identical stream).
         """
         req = entry.request
         if req.temperature <= 0:
@@ -150,19 +190,62 @@ class Engine:
         else:
             self._tok_buf[slot] = tok
 
+    def _may_admit_next(self) -> bool:
+        """Paged backpressure at admission: hold the queue head back until
+        its prompt's pages fit — it stays queued (not failed) and the live
+        slots keep decoding, freeing pages as they finish."""
+        if not self.paged:
+            return True
+        return self.pool.can_admit(self.queue.peek())
+
     def _admit_one(self, req: Request, results: dict) -> None:
         rows, single_cache = self._prefill_request(req)
         entry = SlotEntry(request=req, admitted_at=time.perf_counter(),
-                          admit_step=self._step)
+                          admit_step=self._step,
+                          admit_index=self._admit_counter)
+        self._admit_counter += 1
         slot = self.pool.admit(entry, single_cache)
         self._emit(slot, entry, self._sample(entry, rows), results)
+
+    def _preempt_youngest(self) -> None:
+        """Evict the most recently admitted slot and re-queue its request
+        (progress is discarded; determinism makes the regenerated stream
+        identical). Youngest-first keeps FCFS intact: the oldest live
+        request always advances, so the loop always makes progress."""
+        victim = max(self.pool.entries,
+                     key=lambda s: self.pool.entries[s].admit_index)
+        entry = self.pool.evict(victim)
+        self.queue.requeue(entry.request)
+        self._n_preemptions += 1
+
+    def _grow_pages(self) -> None:
+        """Allocate each live slot's next write page, preempting under
+        pressure. Slots are grown oldest-first so preemption (youngest
+        first) never starves the head of the line."""
+        for slot in sorted(self.pool.entries,
+                           key=lambda s: self.pool.entries[s].admit_index):
+            while slot in self.pool.entries:
+                entry = self.pool.entries[slot]
+                try:
+                    self.pool.ensure_page(slot, entry.next_write_pos)
+                    break
+                except PoolExhausted:
+                    if len(self.pool.entries) <= 1:
+                        raise   # run() pre-check makes this unreachable
+                    self._preempt_youngest()
 
     def _decode_once(self) -> np.ndarray:
         """One batched decode step over every slot; returns the (C, ...)
         last-token logit rows."""
         batch = {"tokens": jnp.asarray(self._tok_buf)}
-        logits, self.pool.cache = self._decode(self._params, self.pool.cache,
-                                               batch)
+        if self.paged:
+            self._grow_pages()
+            logits, self.pool.cache = self._decode(
+                self._params, self.pool.cache,
+                jnp.asarray(self.pool.tables), batch)
+        else:
+            logits, self.pool.cache = self._decode(
+                self._params, self.pool.cache, batch)
         self._step += 1
         return np.asarray(jax.device_get(logits))[:, -1]
 
@@ -171,30 +254,37 @@ class Engine:
     def run(self, requests: Sequence[Request] = ()) -> list[RequestResult]:
         """Drain ``requests`` (plus anything already queued); returns
         results in submission order. Populates ``self.stats``."""
-        # fail fast on requests that cannot fit, before any device work —
-        # a mid-run refusal at admission would abort the loop and discard
-        # every already-finished stream (SlotPool.admit stays the backstop)
+        # fail fast on requests that can *never* fit, before any device
+        # work — a mid-run refusal at admission would abort the loop and
+        # discard every already-finished stream (the pools stay the
+        # backstop). Transient shortage is not failure: paged admission
+        # waits for pages, decode-time exhaustion preempts and re-queues.
         for r in requests:
-            need = r.prompt_len + r.max_new_tokens
-            if need > self.max_seq:
-                raise ValueError(
-                    f"request {r.uid!r} needs {need} cache positions "
-                    f"(prompt {r.prompt_len} + max_new {r.max_new_tokens}) "
-                    f"but the engine holds max_seq={self.max_seq}")
+            self.pool.check_fits(r)
         order = [r.uid for r in requests]
         for r in requests:
             self.queue.submit(r)
         results: dict[str, RequestResult] = {}
         t0 = time.perf_counter()
         steps0, prefills0 = self._step, self._n_prefills
+        preempt0 = self._n_preemptions
 
         while self.queue or self.pool.entries:
             may_admit = self.continuous or not self.pool.entries
-            while may_admit and self.pool.has_free and self.queue:
+            while may_admit and self.pool.has_free and self.queue \
+                    and self._may_admit_next():
                 self._admit_one(self.queue.pop(), results)
                 if not self.continuous and not self.pool.has_free:
                     break
             if not self.pool.entries:
+                if self.queue and not self._may_admit_next():
+                    # an empty pool has every page free, so a head request
+                    # still refused can never be admitted (it bypassed the
+                    # run() pre-check via queue.submit) — fail, don't spin
+                    raise PoolExhausted(
+                        f"request {self.queue.peek().uid!r} cannot be "
+                        f"admitted even into an empty pool "
+                        f"(n_blocks={self.pool.n_blocks})")
                 continue        # gang finished at admission (max_new == 1)
             rows = self._decode_once()
             for slot in self.pool.active_slots:
@@ -209,14 +299,23 @@ class Engine:
         lat = sorted(r.latency_s for r in out) or [0.0]
         self.stats = {
             "mode": "continuous" if self.continuous else "static",
+            "layout": "paged" if self.paged else "contiguous",
             "requests": len(out),
             "generated_tokens": generated,
             "decode_steps": self._step - steps0,
             "prefills": self._n_prefills - prefills0,
+            "preemptions": self._n_preemptions - preempt0,
             "wall_s": wall,
             "tok_per_s": generated / wall if wall > 0 else float("inf"),
             "p50_latency_s": lat[len(lat) // 2],
             "p99_latency_s": lat[min(len(lat) - 1,
                                      int(np.ceil(0.99 * len(lat))) - 1)],
         }
+        if self.paged:
+            self.stats.update({
+                "block": self.pool.block,
+                "n_blocks": self.pool.n_blocks,
+                "pages_in_use": self.pool.pages_in_use,
+                "peak_pages": self.pool.peak_pages,
+            })
         return out

@@ -96,8 +96,17 @@ class RequestQueue:
         self._seen.add(request.uid)
         self._q.append(request)
 
+    def requeue(self, request: Request) -> None:
+        """Return a preempted request to the *front* of the line (its uid is
+        already known). The engine preempts youngest-first, so iterated
+        requeues restore the original FCFS admission order."""
+        self._q.appendleft(request)
+
     def pop(self) -> Request:
         return self._q.popleft()
+
+    def peek(self) -> Request:
+        return self._q[0]
 
     def __len__(self) -> int:
         return len(self._q)

@@ -1,20 +1,33 @@
-"""Fixed-capacity slot pool over a family decode cache.
+"""Slot pools over a family decode cache: contiguous and paged.
 
-The pool *is* a batched decode cache — ``init_cache(capacity, max_seq)`` —
-whose batch axis the engine treats as serving slots via the uniform slot
-contract in ``models/cache_ops.py`` (DESIGN.md §7): admit = insert a B=1
-prefill cache at a free slot index, evict = zero the slot and recycle it.
-One pool type therefore serves the transformer KV cache, the Mamba SSM
-state, and the Zamba2 hybrid without family branches.
+Both pools expose one bookkeeping surface to the engine — ``admit`` /
+``evict`` / ``read`` / ``entries`` / ``has_free`` — over the uniform cache
+contract in ``models/cache_ops.py``.
 
-Invariants (asserted here, tested in tests/test_serving.py):
+:class:`SlotPool` (DESIGN.md §7) is the contiguous baseline: the pool *is* a
+batched decode cache — ``init_cache(capacity, max_seq)`` — so every slot
+owns a full ``max_seq`` sequence stripe and capacity is bounded by the
+longest admissible request, whether or not anything that long is in flight.
 
-* a slot is either free or holds exactly one live request;
-* admission fails loudly when full or when ``prompt + max_new`` cannot fit
-  ``max_seq`` (KV families write at absolute positions — overflow would
-  silently corrupt, so it must be impossible);
-* eviction returns the lowest-index-first reusable slot and zeroes its
-  state, so pool contents stay a pure function of the live requests.
+:class:`PagedSlotPool` (DESIGN.md §8) removes that waste: sequence storage
+is a shared pool of ``n_blocks`` pages of ``block`` tokens, and each slot
+holds a *block table* mapping logical page index → physical page. Admission
+reserves just the prompt's pages; decode grows a slot one page at a time
+(``ensure_page``), and eviction returns pages to the free list. Capacity is
+bounded by **tokens actually in flight**, so a page budget far below
+``capacity · max_seq`` still serves mixed-length traffic — the engine turns
+:class:`PoolExhausted` at decode time into preemption + re-queue instead of
+a crash.
+
+Invariants (asserted here, fuzzed in tests/test_paging.py):
+
+* a slot is either free or holds exactly one live request; a page is either
+  free, owned by exactly one slot, or the trash block (never handed out);
+* admission fails loudly (typed :class:`PoolExhausted`) when no slot/pages
+  are free or when ``prompt + max_new`` cannot fit ``max_seq`` — KV families
+  write at absolute positions, so overflow must be impossible;
+* eviction returns the lowest-index-first reusable slot/pages and zeroes
+  their state, so pool contents stay a pure function of the live requests.
 """
 from __future__ import annotations
 
@@ -22,13 +35,21 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Any
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.models import cache_ops
 from repro.models.cache_ops import slot_evict, slot_insert, slot_read
 
 from .queue import Request
 
-__all__ = ["SlotPool", "SlotEntry"]
+__all__ = ["SlotPool", "PagedSlotPool", "SlotEntry", "PoolExhausted"]
+
+
+class PoolExhausted(RuntimeError):
+    """A capacity refusal: no free slot, no free page, or a request that can
+    never fit the pool. Typed so the engine can distinguish backpressure
+    (preempt / re-queue / wait) from genuine errors."""
 
 
 @dataclass
@@ -37,6 +58,7 @@ class SlotEntry:
     request: Request
     admitted_at: float
     admit_step: int
+    admit_index: int = 0    # monotone admission counter (preemption order)
     generated: list = field(default_factory=list)   # sampled ids, host ints
     key: Any = None                                 # per-request PRNG chain
 
@@ -44,9 +66,17 @@ class SlotEntry:
     def n_generated(self) -> int:
         return len(self.generated)
 
+    @property
+    def next_write_pos(self) -> int:
+        """Cache position the *next* decode step writes for this slot: the
+        prefill filled ``[0, prompt_len)`` and each decode step since has
+        appended one token (the first sampled token comes from the prefill
+        logits, so it is written by the first decode step)."""
+        return self.request.prompt_len + self.n_generated - 1
+
 
 class SlotPool:
-    """Slot bookkeeping + the pooled device cache.
+    """Contiguous slot bookkeeping + the pooled device cache.
 
     ``pool.cache`` is the live device pytree; the engine reassigns it after
     every (donating) decode step, and admission/eviction rebind it through
@@ -85,17 +115,24 @@ class SlotPool:
 
     # ------------------------------------------------------- admit / evict
 
+    def check_fits(self, req: Request) -> None:
+        """Raise :class:`PoolExhausted` if ``req`` can *never* fit this
+        pool (as opposed to transiently not fitting right now). The single
+        source of the fit rule: admission calls it as the backstop and the
+        engine calls it up front at ``run()`` entry."""
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_seq:
+            raise PoolExhausted(
+                f"request {req.uid!r} needs {need} cache positions "
+                f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
+                f"but the pool holds max_seq={self.max_seq}")
+
     def admit(self, entry: SlotEntry, single_cache: Any) -> int:
         """Insert a prefilled B=1 cache into the lowest free slot."""
         req = entry.request
         if not self._free:
-            raise RuntimeError("slot pool is full")
-        need = req.prompt_len + req.max_new_tokens
-        if need > self.max_seq:
-            raise ValueError(
-                f"request {req.uid!r} needs {need} cache positions "
-                f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
-                f"but the pool holds max_seq={self.max_seq}")
+            raise PoolExhausted("slot pool is full")
+        self.check_fits(req)
         slot = heapq.heappop(self._free)
         assert slot not in self.entries, "free-list/entries desync"
         self.cache = slot_insert(self.cache, single_cache, slot)
@@ -114,6 +151,199 @@ class SlotPool:
         if slot not in self.entries:
             raise KeyError(f"slot {slot} is not live")
         return slot_read(self.cache, slot)
+
+    # ------------------------------------------------------------- tokens
+
+    def positions(self) -> np.ndarray:
+        """Per-slot device positions, pulled to host (testing/debug)."""
+        return np.asarray(self.cache.pos)
+
+
+class PagedSlotPool:
+    """Paged slot bookkeeping: shared block pool + per-slot block tables.
+
+    ``pool.cache`` is the paged device pytree (``cache_ops.paged_init``
+    layout); ``pool.tables`` is the host-side ``(capacity, max_blocks)``
+    int32 block-table array handed to the paged decode step each call
+    (-1 = unallocated). Page allocation is host-driven — the free lists are
+    plain heaps, so admit/evict/grow decisions never synchronize with the
+    device — while the actual cache edits go through the pure
+    ``cache_ops.paged_*`` scatters.
+    """
+
+    @staticmethod
+    def plan(capacity: int, max_seq: int, block: int,
+             n_blocks: int | None = None) -> tuple[int, int, int]:
+        """The (block, max_blocks, n_blocks) this pool will derive from the
+        requested geometry — the one place the derivation lives. The engine
+        shapes its compiled paged decode step from the same call, so the
+        device layout and the host bookkeeping can never disagree.
+
+        A page longer than max_seq just pads every gather view (the dense
+        sequence extent is ``max_blocks * block`` ≥ max_seq): clamp, don't
+        pay. ``n_blocks`` defaults to no oversubscription.
+        """
+        if capacity < 1:
+            raise ValueError("slot pool needs capacity ≥ 1")
+        if block < 1:
+            raise ValueError("page size must be ≥ 1 token")
+        block = min(block, max_seq)
+        max_blocks = -(-max_seq // block)
+        n_blocks = capacity * max_blocks if n_blocks is None else n_blocks
+        if n_blocks < 1:
+            raise ValueError("paged pool needs a page budget ≥ 1")
+        return block, max_blocks, n_blocks
+
+    def __init__(self, model, capacity: int, max_seq: int, *,
+                 block: int = 64, n_blocks: int | None = None,
+                 cache: Any = None):
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.block, self.max_blocks, self.n_blocks = self.plan(
+            capacity, max_seq, block, n_blocks)
+        block = self.block
+        self._model = model
+        self.cache = cache if cache is not None else cache_ops.paged_init(
+            model.init_cache, capacity, self.n_blocks, block)
+        self.tables = np.full((capacity, self.max_blocks), -1, np.int32)
+        self._free: list[int] = list(range(capacity))
+        heapq.heapify(self._free)
+        self._free_pages: list[int] = list(range(self.n_blocks))
+        heapq.heapify(self._free_pages)
+        self.entries: dict[int, SlotEntry] = {}
+        self.peak_pages = 0
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def has_free(self) -> bool:
+        return bool(self._free)
+
+    @property
+    def active_slots(self) -> list[int]:
+        return sorted(self.entries)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_blocks - len(self._free_pages)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` sequence positions."""
+        return -(-max(n_tokens, 0) // self.block)
+
+    def _growth_pending(self) -> int:
+        """Live slots that will still request at least one more page before
+        they can finish (full-length need exceeds their allocation)."""
+        n = 0
+        for slot, entry in self.entries.items():
+            req = entry.request
+            allocated = int((self.tables[slot] >= 0).sum())
+            if self.pages_for(req.prompt_len + req.max_new_tokens) > allocated:
+                n += 1
+        return n
+
+    def can_admit(self, req: Request) -> bool:
+        """Slot free and enough pages for the prompt *plus the first decode
+        write* (admitting with exactly the prompt's pages would preempt
+        itself on the next step whenever ``prompt_len % block == 0``),
+        *plus one headroom page per still-growing live slot* — without
+        headroom a tight budget admits the queue head, grows an older slot,
+        preempts the head again, and burns a full B=1 prefill per ping-pong
+        cycle; fully-allocated slots claim none, so a budget with no growth
+        in flight fills every slot."""
+        return (bool(self._free)
+                and self.pages_for(req.prompt_len + 1) + self._growth_pending()
+                <= len(self._free_pages))
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # ------------------------------------------------------- admit / evict
+
+    def _take_pages(self, n: int) -> list[int]:
+        if n > len(self._free_pages):
+            raise PoolExhausted(
+                f"need {n} pages but only {len(self._free_pages)} of "
+                f"{self.n_blocks} are free")
+        pages = [heapq.heappop(self._free_pages) for _ in range(n)]
+        self.peak_pages = max(self.peak_pages, self.pages_in_use)
+        return pages
+
+    def check_fits(self, req: Request) -> None:
+        """Raise :class:`PoolExhausted` if ``req`` can *never* fit: over
+        ``max_seq`` (the block-table width) or over the page budget. Shared
+        by admission and the engine's ``run()`` pre-check."""
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_seq:
+            raise PoolExhausted(
+                f"request {req.uid!r} needs {need} cache positions "
+                f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
+                f"but the pool holds max_seq={self.max_seq}")
+        if self.pages_for(need) > self.n_blocks:
+            raise PoolExhausted(
+                f"request {req.uid!r} needs {self.pages_for(need)} pages "
+                f"of {self.block} tokens but the page budget is "
+                f"n_blocks={self.n_blocks}")
+
+    def admit(self, entry: SlotEntry, single_cache: Any) -> int:
+        """Reserve the prompt's pages and insert a prefilled B=1 cache into
+        the lowest free slot. Lazy reservation: only ``ceil(prompt / block)``
+        pages are taken now; decode growth allocates the rest on demand
+        (:meth:`ensure_page`)."""
+        req = entry.request
+        if not self._free:
+            raise PoolExhausted("slot pool is full")
+        self.check_fits(req)
+        pages = self._take_pages(self.pages_for(req.prompt_len))
+        slot = heapq.heappop(self._free)
+        assert slot not in self.entries, "free-list/entries desync"
+        self.tables[slot, :len(pages)] = pages
+        self.cache = cache_ops.paged_insert(self.cache, single_cache, slot,
+                                            pages, block=self.block)
+        self.entries[slot] = entry
+        return slot
+
+    def ensure_page(self, slot: int, write_pos: int) -> None:
+        """Guarantee the page covering ``write_pos`` is allocated for
+        ``slot`` before a decode step writes there. Raises
+        :class:`PoolExhausted` when the free list is empty — the engine's
+        cue to preempt a slot and re-queue its request."""
+        index = write_pos // self.block
+        if index >= self.max_blocks:
+            raise PoolExhausted(
+                f"slot {slot} write position {write_pos} exceeds "
+                f"max_seq={self.max_seq}")
+        if self.tables[slot, index] >= 0:
+            return
+        self.tables[slot, index] = self._take_pages(1)[0]
+
+    def evict(self, slot: int) -> SlotEntry:
+        """Free ``slot`` and its pages, zeroing their device state; returns
+        its entry."""
+        entry = self.entries.pop(slot)
+        pages = self.tables[slot][self.tables[slot] >= 0]
+        self.cache = cache_ops.paged_evict(self.cache, slot, pages)
+        self.tables[slot, :] = -1
+        for p in pages.tolist():
+            heapq.heappush(self._free_pages, p)
+        heapq.heappush(self._free, slot)
+        return entry
+
+    def read(self, slot: int) -> Any:
+        """The slot's state as a B=1 dense cache (``max_blocks * block``
+        sequence extent)."""
+        if slot not in self.entries:
+            raise KeyError(f"slot {slot} is not live")
+        return cache_ops.paged_read(self.cache, jnp.asarray(self.tables),
+                                    slot, block=self.block)
 
     # ------------------------------------------------------------- tokens
 

@@ -44,6 +44,33 @@ def test_compare_skips_noise_floor_rows():
     assert compare(_run(us=295.0), _run(us=112.0), min_us=50.0) != []
 
 
+def test_check_never_gates_across_signatures(tmp_path):
+    """A latest run whose (backend, interpret, smoke) signature matches no
+    earlier run must never gate — comparing a TPU record against a CPU one
+    (or compiled against interpret) is meaningless however large the
+    ratio."""
+    path = tmp_path / "traj.json"
+    for foreign in (_run(backend="tpu", us=1.0),
+                    _run(interpret=False, us=1.0),
+                    _run(smoke=False, us=1.0)):
+        path.write_text(json.dumps({"runs": [foreign, _run(us=50000.0)]}))
+        assert check(path) == 0, foreign
+
+
+def test_check_gates_same_signature_across_shas(tmp_path):
+    """The git SHA is provenance, not signature: the whole point of the
+    gate is comparing this commit's record against the *last committed*
+    one, so same-signature records with different SHAs must still gate a
+    >2x regression — and pass an under-2x one."""
+    path = tmp_path / "traj.json"
+    path.write_text(json.dumps(
+        {"runs": [_run(sha="old", us=1000.0), _run(sha="new", us=5000.0)]}))
+    assert check(path) == 1
+    path.write_text(json.dumps(
+        {"runs": [_run(sha="old", us=1000.0), _run(sha="new", us=1900.0)]}))
+    assert check(path) == 0
+
+
 def test_check_end_to_end(tmp_path):
     path = tmp_path / "traj.json"
     path.write_text(json.dumps({"runs": [_run(us=1000.0), _run(us=1200.0)]}))

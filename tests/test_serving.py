@@ -21,7 +21,8 @@ from repro.configs.base import ModelConfig
 from repro.launch.serve import generate
 from repro.models import bind
 from repro.models.cache_ops import slot_insert, slot_read
-from repro.serving import Engine, Request, RequestQueue, SlotEntry, SlotPool
+from repro.serving import (Engine, PoolExhausted, Request, RequestQueue,
+                           SlotEntry, SlotPool)
 
 
 def _cfg(family, **kw):
@@ -70,16 +71,17 @@ def test_slot_pool_admit_evict_reuse():
     s0 = pool.admit(entry("a"), c0)
     s1 = pool.admit(entry("b"), c0)
     assert {s0, s1} == {0, 1} and not pool.has_free and len(pool) == 2
-    with pytest.raises(RuntimeError, match="full"):
+    with pytest.raises(PoolExhausted, match="full"):
         pool.admit(entry("c"), c0)
 
     # eviction zeroes the slot and hands back the lowest index first
     pool.evict(s0)
     assert pool.has_free and pool.positions()[s0] == 0
     assert pool.admit(entry("d"), c0) == s0          # reuse after eviction
-    # over-length requests are refused before touching device state
+    # over-length requests are refused before touching device state —
+    # typed (PoolExhausted) so the engine can route it as backpressure
     pool.evict(s0)
-    with pytest.raises(ValueError, match="max_seq"):
+    with pytest.raises(PoolExhausted, match="max_seq"):
         pool.admit(entry("e", gen=100), c0)
     assert pool.has_free                             # refusal kept the slot
 
@@ -117,7 +119,7 @@ def test_engine_rejects_oversized_request_before_any_work():
     engine = Engine(cfg, _params(cfg), capacity=1, max_seq=10)
     good = Request(uid="fits", prompt=_prompts(cfg, 1)[0], max_new_tokens=2)
     bad = Request(uid="big", prompt=_prompts(cfg, 1)[0], max_new_tokens=99)
-    with pytest.raises(ValueError, match="max_seq"):
+    with pytest.raises(PoolExhausted, match="max_seq"):
         engine.run([good, bad])
     assert not engine.queue and not engine.pool.entries
     assert engine.run([good])[0].n_generated == 2
@@ -137,9 +139,11 @@ def test_request_queue_fcfs_and_duplicate_uid():
 
 @pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
 def test_engine_streams_bit_identical_to_sequential(cfg):
-    """Continuous batching (capacity 2, SC-GEMM on) reproduces the
-    sequential per-request baseline exactly — token-for-token — while
-    co-batching requests admitted at different times."""
+    """Continuous batching (capacity 2, SC-GEMM on, paged cache with
+    4-token pages) reproduces the sequential per-request baseline exactly —
+    token-for-token — while co-batching requests admitted at different
+    times. tests/test_paging.py fuzzes the same invariant over randomized
+    schedules and page budgets."""
     params = _params(cfg)
     prompts = _prompts(cfg, 5)
     gens = [3, 7, 2, 5, 4]
@@ -147,7 +151,7 @@ def test_engine_streams_bit_identical_to_sequential(cfg):
                                     gen_tokens=g))[0]
                 for p, g in zip(prompts, gens)]
 
-    engine = Engine(cfg, params, capacity=2, max_seq=8 + max(gens))
+    engine = Engine(cfg, params, capacity=2, max_seq=8 + max(gens), block=4)
     results = engine.run([Request(uid=f"r{i}", prompt=p, max_new_tokens=g)
                           for i, (p, g) in enumerate(zip(prompts, gens))])
     for res, ref in zip(results, baseline):
@@ -185,7 +189,9 @@ def test_engine_eos_eviction_matches_truncated_baseline():
 def test_mixed_workload_fewer_steps_than_static():
     """Acceptance: an 8-request mixed-length workload drains in strictly
     fewer batched decode steps under continuous batching than static
-    batching, with identical streams from both modes."""
+    batching, with identical streams from both modes — and across cache
+    layouts (the continuous engine runs paged, the static one contiguous,
+    so layout can never leak into the tokens)."""
     cfg = dataclasses.replace(CASES[0], use_sc_gemm=False)
     params = _params(cfg)
     prompts = _prompts(cfg, 8, seed=5)
@@ -195,9 +201,11 @@ def test_mixed_workload_fewer_steps_than_static():
         return [Request(uid=f"r{i}", prompt=p, max_new_tokens=g)
                 for i, (p, g) in enumerate(zip(prompts, gens))]
 
-    cont = Engine(cfg, params, capacity=4, max_seq=24, continuous=True)
+    cont = Engine(cfg, params, capacity=4, max_seq=24, continuous=True,
+                  paged=True, block=8)
     r_cont = cont.run(reqs())
-    stat = Engine(cfg, params, capacity=4, max_seq=24, continuous=False)
+    stat = Engine(cfg, params, capacity=4, max_seq=24, continuous=False,
+                  paged=False)
     r_stat = stat.run(reqs())
 
     assert cont.stats["decode_steps"] < stat.stats["decode_steps"], (
