@@ -18,6 +18,15 @@ contiguous engine must refuse it with ``PoolExhausted`` while the paged
 engine drains it inside the same budget by giving the tail many pages and
 the short requests few.
 
+A third, gate-exempt marker row records the **gather-vs-fused decode A/B**
+(ISSUE 5 / DESIGN.md §9): the same paged workload through the PR 4
+gather → decode → commit round-trip and through the fused paged-attention
+path, with µs/token for both and the *peak decode transient* each implies —
+the gather path materializes a dense ``capacity × max_blocks·block`` view
+of every K/V leaf per step (bytes computed from the abstract cache tree),
+while the fused kernel's working set is its VMEM scratch, sized by one
+sequence's pages and independent of capacity.
+
 The workload is deterministic (fixed seeds, greedy sampling) and each mode
 is measured on its second run — the first run pays XLA compilation for the
 prefill/decode executables, which the compiled-step caches
@@ -104,7 +113,82 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
     })
     rows.append(_longtail_row(cfg, params, mesh, capacity, prompt_len,
                               max_gen))
+    rows.append(_fused_row(cfg, params, mesh, n, capacity, prompt_len,
+                           max_gen))
     return rows
+
+
+def _gather_transient_bytes(cfg, capacity: int, block: int,
+                            n_blocks: int, max_blocks: int) -> int:
+    """Bytes of the dense per-step view the gather path materializes: the
+    sum over K/V sequence leaves of the gathered ``(lead, capacity,
+    max_blocks·block, *tail)`` shapes — computed on the abstract cache
+    tree, so it is exactly what ``paged_gather`` would allocate."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import bind, cache_ops
+
+    m = bind(cfg)
+    data_abs = jax.eval_shape(
+        lambda: cache_ops.paged_init(m.init_cache, capacity, n_blocks, block))
+    tables_abs = jax.ShapeDtypeStruct((capacity, max_blocks), jnp.int32)
+    dense_abs = jax.eval_shape(
+        functools.partial(cache_ops.paged_gather, block=block),
+        data_abs, tables_abs)
+    paged_leaves = jax.tree_util.tree_leaves(data_abs)
+    dense_leaves = jax.tree_util.tree_leaves(dense_abs)
+    return sum(d.size * d.dtype.itemsize
+               for d, p in zip(dense_leaves, paged_leaves)
+               if d.shape != p.shape)
+
+
+def _fused_row(cfg, params, mesh, n: int, capacity: int, prompt_len: int,
+               max_gen: int) -> dict:
+    """Gather-vs-fused decode marker (gate-exempt): µs/token for the two
+    paged decode structures on the same workload, plus the peak decode
+    transient each implies. The fused engine forces the Pallas kernel
+    (interpret mode on CPU — the timing is structural, not a TPU claim;
+    the transient bytes are the acceptance signal: gather scales with
+    capacity × max_seq, the kernel's VMEM scratch does not)."""
+    import dataclasses
+
+    from repro.kernels.autotune import PagedFlashConfig
+    from repro.serving import Engine, PagedSlotPool
+
+    max_seq = prompt_len + max_gen
+    block = max(max_seq // 4, 1)       # multi-page tables: a real table walk
+    block, max_blocks, n_blocks = PagedSlotPool.plan(capacity, max_seq,
+                                                     block, None)
+    stats = {}
+    for label, eng_cfg, fused in (
+            ("gather", cfg, False),
+            ("fused", dataclasses.replace(
+                cfg, paged_attn_kernel="pallas_tuned").validate(), True)):
+        for _ in range(2):             # first run compiles, second times
+            engine = Engine(eng_cfg, params, capacity=capacity,
+                            max_seq=max_seq, mesh=mesh, block=block,
+                            n_blocks=n_blocks, fused=fused)
+            engine.run(_requests(cfg, n, prompt_len, max_gen))
+        stats[label] = engine.stats
+    gather_bytes = _gather_transient_bytes(cfg, capacity, block, n_blocks,
+                                           max_blocks)
+    g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    fused_bytes = PagedFlashConfig(kvh=1).vmem_bytes(
+        max_blocks=max_blocks, block=block, g=g, d=cfg.head_dim)
+    return {
+        "name": f"serving/fused_paged/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (
+            f"gather_us_per_tok={1e6 / stats['gather']['tok_per_s']:.1f}"
+            f" fused_us_per_tok={1e6 / stats['fused']['tok_per_s']:.1f}"
+            f" gather_transient_bytes={gather_bytes}"
+            f" fused_scratch_bytes={fused_bytes}"
+            f" transient_ratio={gather_bytes / max(fused_bytes, 1):.1f}x"
+            f" capacity={capacity} block={block} n_blocks={n_blocks}"),
+    }
 
 
 def _longtail_row(cfg, params, mesh, capacity: int, prompt_len: int,

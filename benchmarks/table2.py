@@ -4,9 +4,6 @@ from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-
 from repro.core.error_analysis import mae, table2_mae
 from repro.core.hardware_model import (PAPER_TABLE2, improvement_factors,
                                        table2)

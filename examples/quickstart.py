@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import (correlation_encode, proposed_closed_form, sc_matmul,
                         tcu_decode)
 from repro.core.error_analysis import mae
-from repro.core.hardware_model import PAPER_TABLE2, table2
+from repro.core.hardware_model import table2
 
 
 def bits_to_str(stream):

@@ -72,6 +72,13 @@ class ModelConfig:
     # shape/backend qualify (TPU, causal, no window/softcap, 128-aligned),
     # "jnp" forces the XLA formulation, "pallas_tuned" forces the kernel.
     attn_kernel: str = "auto"
+    # Paged decode-attention execution (DESIGN.md §9), resolved like
+    # attn_kernel: "auto" walks block tables in-kernel on TPU when the
+    # layout qualifies (GQA heads, no softcap, aligned extents), "jnp"
+    # forces the per-layer gathered-dense formulation, "pallas_tuned"
+    # forces the kernel on every eligible call regardless of backend
+    # (interpret mode off TPU — used by the bit-identity tests).
+    paged_attn_kernel: str = "auto"
 
     # --- execution
     remat: bool = True
@@ -110,6 +117,9 @@ class ModelConfig:
             f"{self.name}: unknown sc_impl {self.sc_impl!r}")
         assert self.attn_kernel in ("auto", "jnp", "pallas_tuned"), (
             f"{self.name}: unknown attn_kernel {self.attn_kernel!r}")
+        assert self.paged_attn_kernel in ("auto", "jnp", "pallas_tuned"), (
+            f"{self.name}: unknown paged_attn_kernel "
+            f"{self.paged_attn_kernel!r}")
         if self.family != "ssm":
             assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
         assert self.n_layers % self.group_size == 0, (

@@ -23,7 +23,7 @@ reproduce the column under the paper's own convention and flag it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .tcu import stream_length
 

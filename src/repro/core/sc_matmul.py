@@ -32,7 +32,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from .sc_numerics import SignMagnitude, quantize_sign_magnitude
+from .sc_numerics import quantize_sign_magnitude
 from .tcu import stream_length
 
 __all__ = [

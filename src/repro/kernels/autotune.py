@@ -10,6 +10,9 @@ Tuned subspaces (DESIGN.md §2.3, §6):
   grid step processes, which also sets the flat-input padding group).
 * flash attention (:class:`FlashConfig`) — (bq, bk) block sizes of
   ``kernels.flash_attention``.
+* paged decode attention (:class:`PagedFlashConfig`) — KV heads per grid
+  step of ``kernels.paged_attention`` (how much of the page pool's head
+  axis one table-walk step loads into VMEM).
 
 The best point varies with problem shape, backend, **and interpret mode** —
 interpret-mode timings (Python-loop execution on CPU) say nothing about
@@ -50,14 +53,17 @@ __all__ = [
     "KernelConfig",
     "StreamConfig",
     "FlashConfig",
+    "PagedFlashConfig",
     "AutotuneCache",
     "candidate_configs",
     "candidate_stream_configs",
     "candidate_flash_configs",
+    "candidate_paged_configs",
     "autotune",
     "get_or_tune",
     "get_or_tune_stream",
     "get_or_tune_flash",
+    "get_or_tune_paged",
     "choose_impl",
     "best_of_us",
     "default_cache_path",
@@ -70,9 +76,11 @@ CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 #: shaped) M extents and widens their candidate grid with GEMV-like bm
 #: tiles — a v2 winner at a skinny key was swept without those candidates,
 #: so keeping it would permanently pin decode shapes to the old 128-row
-#: tile (a cache hit never re-sweeps). Older documents are *invalidated* on
-#: load (not migrated); affected shapes simply re-tune once.
-CACHE_VERSION = 3
+#: tile (a cache hit never re-sweeps). v4 adds the paged-flash family
+#: (``paged:`` keys) and bumps the document schema with it so every cache
+#: file carries exactly one key grammar. Older documents are *invalidated*
+#: on load (not migrated); affected shapes simply re-tune once.
+CACHE_VERSION = 4
 
 #: VMEM budget used to prune candidates; conservative fraction of ~16 MiB.
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
@@ -134,6 +142,29 @@ class StreamConfig:
 
     def is_valid(self) -> bool:
         return self.block_rows > 0
+
+
+@dataclass(frozen=True)
+class PagedFlashConfig:
+    """Tuning point for ``kernels.paged_attention``: how many KV heads one
+    table-walk grid step processes. Larger ``kvh`` shrinks the grid (fewer
+    page-walk passes over the table) but multiplies the per-step VMEM tiles
+    and scratch; the best point depends on head count, head dim, and the
+    page geometry, so it is swept like every other kernel subspace."""
+    kvh: int = 1
+
+    def vmem_bytes(self, *, max_blocks: int, block: int, g: int,
+                   d: int) -> int:
+        """Per-step working set: score + fp32 V scratch (whole row) plus the
+        q/k/v/out tiles of one page step."""
+        s_len = max_blocks * block
+        return 4 * (self.kvh * g * s_len          # score scratch
+                    + s_len * self.kvh * d        # fp32 V scratch
+                    + 2 * self.kvh * g * d        # q + out tiles
+                    + 2 * block * self.kvh * d)   # k + v tiles
+
+    def is_valid(self) -> bool:
+        return self.kvh > 0
 
 
 @dataclass(frozen=True)
@@ -213,6 +244,20 @@ class AutotuneCache:
         c = "causal" if causal else "full"
         return (f"flash:{backend}:{_mode(interpret, backend)}:b{b}:h{h}:kv{kv}"
                 f":sq{sq}:skv{skv}:d{d}:{dtype}:{c}")
+
+    @staticmethod
+    def paged_key(c: int, kv: int, g: int, d: int, block: int,
+                  max_blocks: int, window: int | None, softcap: bool,
+                  backend: str | None = None, interpret: bool | None = None,
+                  dtype: str = "float32") -> str:
+        """Key for the paged decode-attention kernel. The whole page-walk
+        geometry is static per serving configuration (capacity, head
+        layout, page size, table width), so it all goes in the key; the
+        window / softcap flags change the masking work per step."""
+        backend = backend or jax.default_backend()
+        return (f"paged:{backend}:{_mode(interpret, backend)}:c{c}:kv{kv}"
+                f":g{g}:d{d}:blk{block}:mb{max_blocks}:w{window or 0}"
+                f":cap{int(softcap)}:{dtype}")
 
     def _load(self) -> None:
         self._entries = self._read_disk()
@@ -370,6 +415,32 @@ def candidate_flash_configs(sq: int, skv: int, d: int, *,
             cfg = FlashConfig(bq=bq, bk=bk)
             if cfg.is_valid() and cfg.vmem_bytes(d) <= vmem_budget:
                 out.append(cfg)
+    return out
+
+
+def candidate_paged_configs(kv: int, g: int, d: int, *, block: int,
+                            max_blocks: int,
+                            vmem_budget: int = VMEM_BUDGET_BYTES
+                            ) -> list[PagedFlashConfig]:
+    """KV-heads-per-step grid for the paged decode kernel: every divisor of
+    the KV head count whose tiles + whole-row scratch fit the VMEM budget.
+
+    Full-MHA layouts (``g == 1``) drop ``kvh = 1`` — the bit-identity
+    envelope needs a ≥ 2 extent on at least one of the (kvh, g) dims (see
+    kernels/paged_attention.py), and the dispatch gate rejects ``g == 1``
+    anyway; the candidate grid stays consistent with it.
+    """
+    out = []
+    for kvh in (1, 2, 4, 8, 16):
+        if kv % kvh != 0 or kvh > kv:
+            continue
+        if g == 1 and kvh == 1:
+            continue
+        cfg = PagedFlashConfig(kvh=kvh)
+        if cfg.is_valid() and cfg.vmem_bytes(max_blocks=max_blocks,
+                                             block=block, g=g,
+                                             d=d) <= vmem_budget:
+            out.append(cfg)
     return out
 
 
@@ -626,6 +697,97 @@ def get_or_tune_flash(q, k, v, *, causal: bool = True,
             cands,
             lambda c: _time_flash_config(q, k, v, causal, c, iters,
                                          interpret), what)
+    cache.put(key, cfg, elapsed_us=us)
+    return cfg
+
+
+# ------------------------------------------------- paged-attention sweep
+
+def _time_paged_config(q, kp, vp, tables, qpos, window, softcap,
+                       cfg: PagedFlashConfig, iters: int,
+                       interpret: bool | None) -> float:
+    from .ops import default_interpret
+    from .paged_attention import paged_attention_pallas
+
+    interp = default_interpret() if interpret is None else interpret
+
+    def call():
+        return jax.block_until_ready(
+            paged_attention_pallas(q, kp, vp, tables, qpos, window=window,
+                                   logit_softcap=softcap, kvh=cfg.kvh,
+                                   interpret=interp))
+
+    return best_of_us(call, iters)
+
+
+#: Synthetic-sweep cap on the slot (capacity) extent: the grid scales
+#: linearly in it, so ranking kvh candidates on a few slots ranks them for
+#: any capacity while bounding trace-time sweep work.
+SYNTH_C_CAP = 8
+
+
+def get_or_tune_paged(q, k_pages, v_pages, tables, q_positions, *,
+                      window: int | None = None,
+                      logit_softcap: float | None = None,
+                      cache: AutotuneCache | None = None,
+                      candidates: Sequence[PagedFlashConfig] | None = None,
+                      iters: int = 3,
+                      interpret: bool | None = None) -> PagedFlashConfig:
+    """Cached best KV-heads-per-step for the paged decode-attention kernel.
+
+    ``q: (C, KV, G, D)``; ``k_pages, v_pages: (P, block, KV, D)``;
+    ``tables: (C, MB)`` — the kernel layout. Trace-safe like the other
+    tuners: a hit resolves from shape alone; a miss under tracing sweeps a
+    synthetic page pool (capacity capped at :data:`SYNTH_C_CAP`, every page
+    live so the walk does worst-case work).
+    """
+    c, kv, g, d = q.shape
+    n_pages, block = k_pages.shape[0], k_pages.shape[1]
+    max_blocks = tables.shape[1]
+    dtype = jnp.dtype(q.dtype).name
+    cache = cache if cache is not None else _default_cache()
+    key = cache.paged_key(c, kv, g, d, block, max_blocks, window,
+                          logit_softcap is not None, interpret=interpret,
+                          dtype=dtype)
+    hit = cache.get(key, PagedFlashConfig)
+    if hit is not None:
+        return hit
+    cands = (list(candidates) if candidates is not None
+             else candidate_paged_configs(kv, g, d, block=block,
+                                          max_blocks=max_blocks))
+    what = f"paged (c={c},kv={kv},g={g},d={d}) blk{block}x{max_blocks}"
+    if any(_is_tracer(t) for t in (q, k_pages, v_pages, tables, q_positions)):
+        c_s = min(c, SYNTH_C_CAP)
+        p_s = min(n_pages, c_s * max_blocks + 1)
+        dt = q.dtype
+
+        def synth_sweep():
+            # built inside the worker thread: array creation on the tracing
+            # thread would stage constants into the caller's trace and leak
+            qs = _synth_normal((c_s, kv, g, d), seed=kv * 31 + d).astype(dt)
+            ks = _synth_normal((p_s, block, kv, d),
+                               seed=block * 31 + d).astype(dt)
+            vs = _synth_normal((p_s, block, kv, d),
+                               seed=block * 37 + d).astype(dt)
+            # fully-allocated fragmented tables + max positions: every grid
+            # step does real work, so the sweep ranks worst-case walk cost
+            tbl = jnp.asarray(
+                (np.arange(c_s * max_blocks, dtype=np.int64) * 7919
+                 % max(p_s - 1, 1)).reshape(c_s, max_blocks).astype(np.int32))
+            qp = jnp.full((c_s,), max_blocks * block - 1, jnp.int32)
+            return _sweep(
+                cands,
+                lambda cf: _time_paged_config(qs, ks, vs, tbl, qp, window,
+                                              logit_softcap, cf, iters,
+                                              interpret), what)
+
+        cfg, us = _sweep_outside_trace(synth_sweep)
+    else:
+        cfg, us = _sweep(
+            cands,
+            lambda cf: _time_paged_config(q, k_pages, v_pages, tables,
+                                          q_positions, window, logit_softcap,
+                                          cf, iters, interpret), what)
     cache.put(key, cfg, elapsed_us=us)
     return cfg
 

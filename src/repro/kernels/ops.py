@@ -23,7 +23,7 @@ from .sc_matmul import sc_matmul_counts_pallas
 from .sc_bitops import sc_stream_mul_pallas
 
 __all__ = ["sc_matmul_pallas", "sc_stream_mul", "flash_attention_tuned",
-           "default_interpret"]
+           "paged_decode_attention_tuned", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -137,3 +137,29 @@ def flash_attention_tuned(q: jax.Array, k: jax.Array, v: jax.Array, *,
     cfg = get_or_tune_flash(q, k, v, causal=causal, interpret=interpret)
     return flash_attention_pallas(q, k, v, causal=causal, bq=cfg.bq,
                                   bk=cfg.bk, interpret=interpret)
+
+
+def paged_decode_attention_tuned(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, tables: jax.Array,
+                                 q_positions: jax.Array, *,
+                                 window: int | None = None,
+                                 logit_softcap: float | None = None,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Fused paged decode attention with the autotuned KV-heads-per-step.
+
+    Kernel layout: ``q (C, KV, G, D)``; ``k_pages, v_pages
+    (P, block, KV, D)`` with the last page the trash block; ``tables
+    (C, MB) int32`` (−1 = unallocated); ``q_positions (C,)``. The model
+    layer caller (``models.layers.paged_decode_attention``) checks
+    eligibility and owns the gathered-dense fallback.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from .autotune import get_or_tune_paged
+    from .paged_attention import paged_attention_pallas
+    cfg = get_or_tune_paged(q, k_pages, v_pages, tables, q_positions,
+                            window=window, logit_softcap=logit_softcap,
+                            interpret=interpret)
+    return paged_attention_pallas(q, k_pages, v_pages, tables, q_positions,
+                                  window=window, logit_softcap=logit_softcap,
+                                  kvh=cfg.kvh, interpret=interpret)

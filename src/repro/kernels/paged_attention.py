@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: fused paged-attention for decode (DESIGN.md §9).
+
+The paged serving path (DESIGN.md §8) stores KV state as a shared pool of
+``block``-token pages addressed through per-slot block tables. Before this
+kernel, every decode step materialized the gathered dense per-slot view —
+a ``capacity × max_blocks·block`` HBM transient per sequence leaf — just so
+the dense ``decode_attention`` could consume it. This kernel walks the block
+table *inside* the kernel instead: the table and the per-slot positions are
+scalar-prefetched, the K/V ``BlockSpec`` index maps translate (slot, logical
+page) → physical page per grid step, and the page pool is read in place.
+The transient disappears; per-step working memory is the VMEM scratch below,
+which scales with ``max_blocks · block`` (one sequence), never with
+capacity. Same "compute where the bits live" move as the paper's
+bit-parallel multiplier — restructure the storage walk, keep the arithmetic.
+
+**Bit-identity contract.** Decode attention has exactly one query token per
+slot, so the whole score row fits in VMEM. Instead of online-softmax
+(whose running rescale by ``exp(m_prev - m_new)`` re-rounds the
+accumulator), the kernel buffers per-page scores and fp32 V tiles in
+scratch and takes ONE exact softmax at the last page — the same
+``max → exp → sum → divide → PV`` reduction, over the same element order
+(page-major position order = the dense S axis) and the same einsum dim
+structure, as ``cache_ops.paged_gather`` + ``models.layers.decode_attention``
+(the dim structure matters: XLA CPU picks its contraction micro-kernel by
+shape, and a differently-shaped dot over the same elements drifts 1–2 ulp).
+Pages the table leaves unallocated (entry −1) are redirected to the trash
+block exactly like ``paged_gather``; positions past a slot's ``pos`` (and
+outside its sliding window) mask to −1e30, whose fp32 softmax term
+underflows to exactly 0.0. Fully masked pages skip their dot products and
+write the −1e30 / zero tiles directly — bitwise the same result, none of
+the work.
+
+**Exactness envelope** (verified by tests/test_paged_attention.py): bitwise
+equality with the gathered-dense path holds for GQA head layouts
+(``H // KV ≥ 2``), with or without sliding windows, fp32 or bf16. Two
+regimes fall outside it and are dispatch-ineligible in
+``models.layers.paged_decode_attention`` (mirroring the flash kernel's
+feature gate): logit softcap — the ``tanh`` chain fuses differently in the
+two programs — and full-MHA ``H == KV``, where XLA collapses the dense
+path's size-1 group dim into contraction shapes this kernel cannot mimic
+page-wise. Both fall back to the per-layer gather, which still avoids the
+all-layer dense transient the pre-fused path materialized.
+
+Layout: ``q (C, KV, G, D)`` — one token per slot, heads grouped per KV head
+(head ``h`` of the layer layout is ``(h // G, h % G)``); ``k_pages,
+v_pages (P, block, KV, D)`` with page ``P - 1`` the trash block;
+``tables (C, MB) int32``; ``q_positions (C,) int32``. Grid
+``(C, KV // kvh, MB)`` with the page walk innermost ("arbitrary") carrying
+the scratch; ``kvh`` (KV heads per grid step) is the
+:class:`repro.kernels.autotune.PagedFlashConfig` tuning knob.
+
+Compiled-TPU alignment wants ``D % 128 == 0`` and ``block % 8 == 0``
+(lane / fp32-sublane tiling); interpret mode (this container, the test
+suite) has no such constraint — ``models.layers.paged_decode_attention``
+gates dispatch accordingly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams as _CompilerParams
+
+__all__ = ["paged_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
+            logit_softcap: float | None,
+            tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref, s_ref, vb_ref):
+    ci = pl.program_id(0)
+    ji = pl.program_id(2)
+    qpos = qpos_ref[ci]
+    page_start = ji * block
+
+    # A page whose every position masks out contributes exactly the -1e30
+    # scores / zero-weighted V rows the dense path computes for it — write
+    # those tiles directly and skip both dot products.
+    fully_masked = page_start > qpos
+    if window is not None:
+        fully_masked |= qpos - (page_start + block - 1) >= window
+
+    @pl.when(jnp.logical_not(fully_masked))
+    def _score():
+        q = q_ref[...]                               # (1, kvh, g, d)
+        k = k_ref[...]                               # (1, block, kvh, d)
+        # literally the dense path's score einsum — same dim structure
+        # ("bqcgd,bkcd->bcgqk" with b=1, q folded into the lead axis), so
+        # XLA lowers the same contraction micro-kernel and the bits match
+        s = jnp.einsum("bqcgd,bkcd->bcgqk", q[None], k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s[0, :, :, 0]                            # (kvh, g, block)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        kpos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s_ref[ji] = jnp.where(mask, s, NEG_INF)
+        vb_ref[ji] = v_ref[0].astype(jnp.float32)
+
+    @pl.when(fully_masked)
+    def _skip():
+        s_ref[ji] = jnp.full_like(s_ref[ji], NEG_INF)
+        vb_ref[ji] = jnp.zeros_like(vb_ref[ji])
+
+    @pl.when(ji == max_blocks - 1)
+    def _finish():
+        kvh = s_ref.shape[1]
+        s_len = max_blocks * block
+        # Exact softmax over the full row. The reductions must run over a
+        # trailing S axis in page-major position order — reducing the raw
+        # (MB, kvh, g, block) scratch over (0, 3) associates the sum
+        # differently and drifts 1-2 ulp off the dense jax.nn.softmax.
+        # The transposes/reshapes themselves are bit-exact.
+        s = s_ref[...].transpose(1, 2, 0, 3).reshape(
+            1, kvh, -1, 1, s_len)                    # (1, kvh, g, 1, S)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        un = jnp.exp(s - m)
+        denom = jnp.sum(un, axis=-1, keepdims=True)
+        p = un / denom
+        # literally the dense path's PV einsum on this slot's rows, with
+        # the page-major scratch flattened back to the dense S axis
+        v = vb_ref[...].reshape(1, s_len, kvh, -1)   # (1, S, kvh, d)
+        out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v)  # fp32, like the dense PV
+        o_ref[0] = out[0, :, :, 0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "logit_softcap",
+                                             "kvh", "interpret"))
+def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, tables: jax.Array,
+                           q_positions: jax.Array, *,
+                           window: int | None = None,
+                           logit_softcap: float | None = None,
+                           kvh: int = 1,
+                           interpret: bool = False) -> jax.Array:
+    """``q: (C, KV, G, D)``; ``k_pages, v_pages: (P, block, KV, D)``;
+    ``tables: (C, MB) int32`` (−1 = unallocated); ``q_positions: (C,)``.
+
+    Returns ``(C, KV, G, D)`` — bit-identical to gathering the pages dense
+    and running :func:`repro.models.layers.decode_attention`. ``kvh`` must
+    divide KV (autotuned via :class:`~repro.kernels.autotune.PagedFlashConfig`).
+    """
+    c, kv, g, d = q.shape
+    n_pages, block, _, _ = k_pages.shape
+    max_blocks = tables.shape[1]
+    trash = n_pages - 1
+    scale = d ** -0.5
+    if kv % kvh != 0:
+        # a non-dividing kvh would truncate the head grid and return
+        # uninitialized output rows for the remainder — fail loudly instead
+        raise ValueError(f"kvh={kvh} must divide the KV head count {kv}")
+
+    def qmap(ci, hi, ji, tbl, qp):
+        return (ci, hi, 0, 0)
+
+    def kvmap(ci, hi, ji, tbl, qp):
+        page = tbl[ci, ji]
+        # unallocated → trash block, exactly like cache_ops._safe_tables
+        return (jnp.where(page < 0, trash, page), 0, hi, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c, kv // kvh, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, kvh, g, d), qmap),
+            pl.BlockSpec((1, block, kvh, d), kvmap),
+            pl.BlockSpec((1, block, kvh, d), kvmap),
+        ],
+        out_specs=pl.BlockSpec((1, kvh, g, d), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((max_blocks, kvh, g, block), jnp.float32),  # scores
+            pltpu.VMEM((max_blocks, block, kvh, d), jnp.float32),  # fp32 V
+        ],
+    )
+    kernel = functools.partial(_kernel, block, max_blocks, scale, window,
+                               logit_softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, kv, g, d), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), q_positions.astype(jnp.int32),
+      q, k_pages, v_pages)

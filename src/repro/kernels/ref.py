@@ -7,8 +7,8 @@ import jax.numpy as jnp
 
 from repro.core.multipliers import proposed_closed_form
 from repro.core.sc_numerics import quantize_sign_magnitude
-from repro.core.tcu import (correlation_encode, pack_stream, popcount_u32,
-                            stream_length, tcu_decode)
+from repro.core.tcu import (correlation_encode, pack_stream, stream_length,
+                            tcu_decode)
 
 __all__ = ["sc_matmul_counts_ref", "sc_matmul_ref", "sc_stream_mul_ref",
            "sc_stream_words_ref"]

@@ -18,7 +18,6 @@ import traceback         # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs.registry import ARCHS                          # noqa: E402
 from repro.configs.shapes import SHAPES, input_specs, is_applicable  # noqa: E402
@@ -27,8 +26,6 @@ from repro.launch.hlo_analysis import parse_collective_bytes, roofline_terms  # 
 from repro.launch.mesh import make_production_mesh                # noqa: E402
 from repro.launch.modelmeta import model_flops, param_counts      # noqa: E402
 from repro.models import bind                                     # noqa: E402
-from repro.parallel.sharding import (batch_pspecs, cache_pspecs,  # noqa: E402
-                                     named, param_pspecs)
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 

@@ -105,6 +105,14 @@ def main() -> None:
                          "emulation of the paper's multiplier)")
     ap.add_argument("--sc-impl", choices=SC_IMPLS, default=None,
                     help="SC-GEMM kernel (overrides the config's sc_impl)")
+    ap.add_argument("--paged-attn", choices=("auto", "jnp", "pallas_tuned"),
+                    default=None,
+                    help="paged decode-attention dispatch (DESIGN.md §9; "
+                         "overrides the config's paged_attn_kernel)")
+    ap.add_argument("--no-fused-paged", action="store_true",
+                    help="paged decode through the gather→decode→commit "
+                         "round-trip instead of attending on the page pool "
+                         "directly (the memory A/B)")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -112,6 +120,10 @@ def main() -> None:
         cfg = cfg.reduced(dtype="float32")
     cfg = apply_numeric_overrides(cfg, sc_gemm=args.sc_gemm,
                                   sc_impl=args.sc_impl)
+    if args.paged_attn is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  paged_attn_kernel=args.paged_attn).validate()
     m = bind(cfg)
     params = m.init_params(jax.random.PRNGKey(0))
 
@@ -132,7 +144,7 @@ def main() -> None:
                     max_seq=args.prompt_len + args.gen,
                     continuous=not args.no_continuous,
                     paged=not args.no_paged, block=args.block,
-                    n_blocks=args.pages)
+                    n_blocks=args.pages, fused=not args.no_fused_paged)
     t0 = time.time()
     results = engine.run(requests)
     dt = time.time() - t0

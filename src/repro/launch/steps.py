@@ -7,7 +7,6 @@ drivers execute.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,8 @@ from repro.optim.adamw import Quantized8
 from repro.optim.schedules import warmup_cosine
 from repro.parallel.context import activation_sharding_scope
 from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
-                                     paged_pool_pspecs, param_pspecs)
+                                     paged_pool_pspecs, paged_tables_pspec,
+                                     param_pspecs)
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
            "build_paged_decode_step", "cached_prefill_step",
@@ -115,8 +115,6 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, *,
     p_specs = param_pspecs(cfg, params_abs, mesh)
     o_specs = opt_pspecs(cfg, opt_abs, p_specs, mesh)
 
-    from repro.configs.shapes import SHAPES  # avoid cycle at module import
-    dummy_batch = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}
     b_specs_fn = lambda batch: batch_pspecs(cfg, batch, mesh)
 
     shardings = {
@@ -202,28 +200,37 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
 
 
 def build_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
-                            block: int, n_blocks: int, max_blocks: int):
-    """Decode step over a *paged* slot pool (DESIGN.md §8). Signature:
+                            block: int, n_blocks: int, max_blocks: int,
+                            fused: bool = True):
+    """Decode step over a *paged* slot pool (DESIGN.md §8/§9). Signature:
     ``decode(params, data, tables, batch) -> (logits, data)`` where ``data``
     is the ``cache_ops.paged_init`` pytree and ``tables`` the
     ``(capacity, max_blocks)`` int32 block-table array.
 
-    The family decode math is reused verbatim: pages are gathered into the
-    dense per-slot view, ``m.decode_step`` runs unchanged, and the one token
-    it appended per slot is scattered back into its page — so paged streams
-    are bit-identical to the contiguous layout by construction. One compiled
-    executable per (cfg, mesh, capacity, block, n_blocks, max_blocks): the
-    block *shape* is static, the table *contents* are a runtime input, so
-    page churn never recompiles.
+    ``fused=True`` (the default, and what the serving engine builds) runs
+    the family's ``paged_decode_step``: every attention layer scatters its
+    token into its page and attends *through the block table* —
+    ``models.layers.paged_decode_attention``, in-kernel on eligible
+    layouts per ``cfg.paged_attn_kernel`` — so the ``capacity × max_seq``
+    dense view never materializes. ``fused=False`` keeps the PR 4
+    gather → dense ``decode_step`` → one-token commit round-trip as the
+    memory A/B and the bit-identity reference. Both are one compiled
+    executable per (cfg, mesh, capacity, block, n_blocks, max_blocks):
+    the block *shape* is static, the table *contents* are a runtime input,
+    so page churn never recompiles.
     """
     from repro.models import cache_ops
     m = bind(cfg)
 
-    def decode(params, data, tables, batch):
-        dense = cache_ops.paged_gather(data, tables, block=block)
-        logits, dense2 = m.decode_step(params, dense, batch)
-        return logits, cache_ops.paged_commit(data, dense2, tables,
-                                              block=block)
+    if fused:
+        def decode(params, data, tables, batch):
+            return m.paged_decode_step(params, data, tables, batch)
+    else:
+        def decode(params, data, tables, batch):
+            dense = cache_ops.paged_gather(data, tables, block=block)
+            logits, dense2 = m.decode_step(params, dense, batch)
+            return logits, cache_ops.paged_commit(data, dense2, tables,
+                                                  block=block)
 
     params_abs = abstract_params(cfg)
     p_specs = param_pspecs(cfg, params_abs, mesh)
@@ -243,7 +250,7 @@ def build_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
         "params": named(mesh, p_specs),
         "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
         "cache": data_sh,
-        "tables": NamedSharding(mesh, P(None, None)),   # tiny; replicated
+        "tables": NamedSharding(mesh, paged_tables_pspec(mesh)),
     }
     # data donation aliases in/out (same shardings) — the decode steady state
     jitted = jax.jit(decode, donate_argnums=(1,),
@@ -274,9 +281,12 @@ def cached_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
 
 @functools.lru_cache(maxsize=64)
 def cached_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
-                             block: int, n_blocks: int, max_blocks: int):
-    """Memoized on the *block shape* (capacity, block, n_blocks, max_blocks):
-    engines serving the same paged configuration share one executable; table
-    contents and page churn are runtime inputs."""
+                             block: int, n_blocks: int, max_blocks: int,
+                             fused: bool = True):
+    """Memoized on the *block shape* (capacity, block, n_blocks, max_blocks)
+    plus the fused/gather structure: engines serving the same paged
+    configuration share one executable; table contents and page churn are
+    runtime inputs."""
     return build_paged_decode_step(cfg, mesh, capacity=capacity, block=block,
-                                   n_blocks=n_blocks, max_blocks=max_blocks)
+                                   n_blocks=n_blocks, max_blocks=max_blocks,
+                                   fused=fused)

@@ -12,11 +12,9 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs.registry import ARCHS

@@ -52,7 +52,8 @@ import numpy as np
 
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
            "paged_init", "paged_gather", "paged_commit", "paged_insert",
-           "paged_evict", "paged_read", "SLOT_AXIS", "SEQ_FIELDS"]
+           "paged_evict", "paged_read", "paged_token_entry", "SLOT_AXIS",
+           "SEQ_FIELDS"]
 
 #: The slot (batch) dimension of every non-``pos`` cache leaf.
 SLOT_AXIS = 1
@@ -206,6 +207,27 @@ def paged_gather(data: Any, tables: jax.Array, *, block: int) -> Any:
     return jax.tree_util.tree_map_with_path(one, data)
 
 
+def paged_token_entry(tables: jax.Array, pos, *, block: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Per-slot ``(table entry, in-page offset)`` of the page cell holding
+    each row's token at ``pos``.
+
+    The one derivation of where a decode-step token lands in the page pool,
+    shared by :func:`paged_commit` and the fused in-layer scatter
+    (``models.layers.PagedKV`` decode paths) so the two write paths can
+    never disagree. The entry is the *raw* table value — callers redirect
+    negatives (free slots, whose drifted positions must land in the trash
+    block) with their leaf's trash index. The page index is clipped into
+    the table like the gather view clips its extent, so a drifted free
+    slot's cell is always in-bounds.
+    """
+    capacity, max_blocks = tables.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    page_ix = jnp.clip(pos // block, 0, max_blocks - 1)
+    entry = jnp.take_along_axis(tables, page_ix[:, None], axis=1)[:, 0]
+    return entry, pos % block
+
+
 def paged_commit(data: Any, dense: Any, tables: jax.Array, *,
                  block: int) -> Any:
     """Fold one decode step's updates from the dense view back into pages.
@@ -218,11 +240,9 @@ def paged_commit(data: Any, dense: Any, tables: jax.Array, *,
     entry -1) scatter into the trash block; duplicate trash writes race but
     trash contents are never read unmasked.
     """
-    capacity, max_blocks = tables.shape
+    capacity, _ = tables.shape
     wpos = jnp.asarray(data.pos, jnp.int32)               # pre-step positions
-    page_ix = jnp.clip(wpos // block, 0, max_blocks - 1)
-    entry = jnp.take_along_axis(tables, page_ix[:, None], axis=1)[:, 0]
-    off = wpos % block
+    entry, off = paged_token_entry(tables, wpos, block=block)
     rows = jnp.arange(capacity)
 
     def one(path, pl, dl):

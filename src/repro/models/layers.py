@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["rms_norm", "rope", "apply_rope", "apply_mrope", "flash_attention",
-           "decode_attention", "softcap"]
+           "decode_attention", "paged_decode_attention", "PagedKV", "softcap"]
 
 
 def rms_norm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
@@ -271,6 +271,103 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out = jax.lax.map(lambda args: q_step(*args), (q_blocks, qpos_blocks))
     out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq + pq, h, d)
     return out[:, :sq].astype(q.dtype)
+
+
+class PagedKV(NamedTuple):
+    """One attention site's KV state in the paged pool layout (DESIGN.md
+    §8/§9), as the decode paths thread it through a layer: page pools
+    ``k, v: (P, block, KV, hd)`` (last page = trash block) plus the shared
+    ``(capacity, max_blocks)`` block table. Family decode steps build one
+    per layer from the scanned cache leaves; ``_attn_forward`` recognizes
+    it and takes the fused paged path instead of the dense-view scatter."""
+    k: jax.Array
+    v: jax.Array
+    tables: jax.Array
+
+    @property
+    def block(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def trash(self) -> int:
+        return self.k.shape[0] - 1
+
+
+def _gather_pages(pages: jax.Array, tables: jax.Array) -> jax.Array:
+    """One leaf's gathered-dense view: ``(P, block, KV, D)`` pages through a
+    ``(C, MB)`` table -> ``(C, MB·block, KV, D)``, unallocated entries
+    redirected to the trash block — ``cache_ops.paged_gather`` for a single
+    lead slice, kept bit-identical to it (same redirect, same reshape)."""
+    safe = jnp.where(tables < 0, pages.shape[0] - 1, tables)
+    g = pages[safe]                            # (C, MB, block, KV, D)
+    c, mb, blk = g.shape[:3]
+    return g.reshape(c, mb * blk, *g.shape[3:])
+
+
+def _paged_kernel_eligible(g: int, d: int, block: int,
+                           logit_softcap: float | None,
+                           interpret: bool, *, kv: int = 2,
+                           max_blocks: int = 1) -> bool:
+    """Layouts the fused paged kernel serves *bit-identically* to the
+    gathered-dense path (kernels/paged_attention.py): GQA head grouping
+    (g ≥ 2 — full-MHA collapses the dense einsum's group dim into
+    contraction shapes the page-wise kernel cannot reproduce bitwise) and
+    no logit softcap (the tanh chain fuses differently per program).
+    Compiled TPU additionally needs MXU/sublane-aligned extents; interpret
+    mode executes the same jnp ops and has no alignment constraint. The
+    tuning grid must also be non-empty — a whole-row scratch too big for
+    the VMEM budget (huge ``max_blocks · block``) has no valid candidate,
+    and the dispatch must fall back to the gather rather than let the
+    tuner raise mid-trace."""
+    if g < 2 or logit_softcap is not None:
+        return False
+    if not (interpret or (d % 128 == 0 and block % 8 == 0)):
+        return False
+    from repro.kernels.autotune import candidate_paged_configs
+    return bool(candidate_paged_configs(kv, g, d, block=block,
+                                        max_blocks=max_blocks))
+
+
+def paged_decode_attention(q: jax.Array, paged: PagedKV, *,
+                           q_position: jax.Array,
+                           window: int | None = None,
+                           logit_softcap: float | None = None,
+                           kernel_impl: str = "auto") -> jax.Array:
+    """Single-step attention straight against the paged KV pool.
+
+    ``q: (C, 1, H, D)``; ``paged`` holds this site's page pools and block
+    table; ``q_position: (C,)``. ``kernel_impl`` dispatches like
+    ``flash_attention``'s (DESIGN.md §6): "auto" walks the block table
+    in-kernel on TPU when :func:`_paged_kernel_eligible` holds,
+    "pallas_tuned" forces the kernel on every eligible call regardless of
+    backend (interpret off TPU — the bit-identity tests), "jnp" forces the
+    gathered-dense formulation. Ineligible calls (softcap layers, full-MHA
+    head layouts) always gather — per layer, never the whole cache tree.
+    """
+    if kernel_impl not in ("auto", "jnp", "pallas_tuned"):
+        raise ValueError(f"unknown paged attention kernel_impl "
+                         f"{kernel_impl!r}")
+    c, _, h, d = q.shape
+    kv = paged.k.shape[2]
+    g = h // kv
+    from repro.kernels.ops import default_interpret
+    interpret = default_interpret()
+    eligible = _paged_kernel_eligible(g, d, paged.block, logit_softcap,
+                                      interpret, kv=kv,
+                                      max_blocks=paged.tables.shape[1])
+    use_kernel = (kernel_impl == "pallas_tuned" and eligible) or (
+        kernel_impl == "auto" and eligible
+        and jax.default_backend() == "tpu")
+    if use_kernel:
+        from repro.kernels.ops import paged_decode_attention_tuned
+        out = paged_decode_attention_tuned(
+            q[:, 0].reshape(c, kv, g, d), paged.k, paged.v, paged.tables,
+            q_position, window=window, logit_softcap=logit_softcap)
+        return out.reshape(c, 1, h, d)
+    return decode_attention(q, _gather_pages(paged.k, paged.tables),
+                            _gather_pages(paged.v, paged.tables),
+                            q_position=q_position, window=window,
+                            logit_softcap=logit_softcap)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,

@@ -49,6 +49,15 @@ class BoundModel:
     def decode_step(self, params, cache, batch):
         return self._mod.decode_step(params, self.cfg, cache, batch)
 
+    def paged_decode_step(self, params, cache, tables, batch):
+        """Fused paged decode (DESIGN.md §9): ``cache`` in the
+        ``cache_ops.paged_init`` layout, ``tables`` the ``(capacity,
+        max_blocks)`` block table. Every family implements it — the SSM
+        family's is the plain decode step, since without ``k``/``v``
+        sequence leaves the paged layout is the slot layout."""
+        return self._mod.paged_decode_step(params, self.cfg, cache, tables,
+                                           batch)
+
     def prefill_step(self, params, batch, *, extra_slots: int = 0):
         return self._mod.prefill_step(params, self.cfg, batch,
                                       extra_slots=extra_slots)

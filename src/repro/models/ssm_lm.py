@@ -12,7 +12,8 @@ from repro.parallel.context import shard_activations
 from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
                      mamba_block, mamba_decode_step)
 
-__all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache", "decode_step"]
+__all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache",
+           "decode_step", "paged_decode_step"]
 
 
 def _dtype(cfg):
@@ -128,3 +129,15 @@ def decode_step(params: dict, cfg: ModelConfig, cache: SSMCacheState,
     x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
     logits = (x @ params["embed"].T).astype(jnp.float32)
     return logits, SSMCacheState(mamba=MambaCache(*new_caches), pos=cache.pos + 1)
+
+
+def paged_decode_step(params: dict, cfg: ModelConfig, cache: SSMCacheState,
+                      tables: jax.Array, batch: dict
+                      ) -> tuple[jax.Array, SSMCacheState]:
+    """Paged decode for the pure-SSM family is just the decode step: the
+    cache has no ``k``/``v`` sequence leaves, so its paged layout *is* the
+    slot layout (``cache_ops.paged_init`` leaves it untouched) and the
+    block table is irrelevant — kept in the signature so the launch-step
+    builder drives every family identically (DESIGN.md §9)."""
+    del tables
+    return decode_step(params, cfg, cache, batch)

@@ -17,7 +17,6 @@ backend/autotune cache).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -26,12 +25,13 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.sc_layers import sc_proj
 from repro.parallel.context import shard_activations
-from .layers import (apply_mrope, apply_rope, decode_attention,
-                     flash_attention, rms_norm, rope, softcap)
+from .layers import (PagedKV, apply_mrope, apply_rope, decode_attention,
+                     flash_attention, paged_decode_attention, rms_norm, rope,
+                     softcap)
 from .moe import init_moe_params, moe_ffn
 
 __all__ = ["init_params", "forward_hidden", "loss_fn", "init_kv_cache",
-           "decode_step", "logits_from_hidden"]
+           "decode_step", "paged_decode_step", "logits_from_hidden"]
 
 
 def _dtype(cfg: ModelConfig):
@@ -159,7 +159,28 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
 
-    if cache is not None and cache != "collect":
+    if isinstance(cache, PagedKV):
+        # fused paged decode (DESIGN.md §9): scatter this token's K/V
+        # straight into its page — (tables[slot, pos // block], pos % block),
+        # the same cell paged_commit would target — then attend against the
+        # page pool itself (in-kernel table walk, or the per-layer gathered
+        # view for ineligible layouts). No dense round-trip exists to drift
+        # from: a free slot's table entry is -1, so its drifted-position
+        # write lands in the trash block, which only masked reads ever see.
+        from .cache_ops import paged_token_entry
+        cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        entry, off = paged_token_entry(cache.tables, cache_pos,
+                                       block=cache.block)
+        bid = jnp.where(entry < 0, cache.trash, entry)
+        k_pages = cache.k.at[bid, off].set(k[:, 0].astype(cache.k.dtype))
+        v_pages = cache.v.at[bid, off].set(v[:, 0].astype(cache.v.dtype))
+        new_paged = PagedKV(k_pages, v_pages, cache.tables)
+        out = paged_decode_attention(q, new_paged, q_position=cache_pos,
+                                     window=window,
+                                     logit_softcap=cfg.attn_softcap,
+                                     kernel_impl=cfg.paged_attn_kernel)
+        new_cache = new_paged
+    elif cache is not None and cache != "collect":
         # decode: write this token's K/V at each sequence's own position.
         # ``cache_pos: (B,)`` — per-sequence absolute positions, so sequences
         # admitted at different times (serving slot pool, DESIGN.md §7) share
@@ -382,13 +403,17 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
     return KVCache(k=k, v=v, pos=jnp.zeros((batch,), jnp.int32))
 
 
-def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
-                batch: dict) -> tuple[jax.Array, KVCache]:
-    """One token for every sequence in the batch. ``batch["tokens"]: (B, 1)``
-    (or (B, 1, K) for codebooks). Returns (logits, updated cache).
+def _run_decode(params: dict, cfg: ModelConfig, cache: KVCache, batch: dict,
+                layer_cache) -> tuple[jax.Array, KVCache]:
+    """Shared one-token decode: embed, scan the layer groups, project.
 
-    ``cache.pos`` is per-sequence, so co-batched sequences may sit at
-    different positions (continuous batching)."""
+    ``layer_cache(k_leaf, v_leaf)`` builds what ``_attn_forward`` consumes
+    for one layer from the scanned cache leaves — a plain ``(k, v)`` dense
+    pair for the contiguous layout, a :class:`~repro.models.layers.PagedKV`
+    for the paged pool. Everything else (positions, M-RoPE, the scan
+    structure, the LM head) is identical between the two layouts, which is
+    what keeps their streams bit-identical.
+    """
     x = _embed_tokens(params, cfg, batch)
     b = x.shape[0]
     pos = jnp.broadcast_to(cache.pos, (b,))
@@ -407,7 +432,8 @@ def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
             x, kvc, _ = _layer_forward(
                 group_params[p], x, cfg, p,
                 positions=positions, mrope_positions=mrope_positions,
-                cache=(inputs["k"][p], inputs["v"][p]), cache_pos=pos)
+                cache=layer_cache(inputs["k"][p], inputs["v"][p]),
+                cache_pos=pos)
             new_k.append(kvc[0])
             new_v.append(kvc[1])
         return x, (tuple(new_k), tuple(new_v))
@@ -418,3 +444,29 @@ def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
     x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
     logits = logits_from_hidden(params, cfg, x)
     return logits, KVCache(k=ks, v=vs, pos=pos + 1)
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
+                batch: dict) -> tuple[jax.Array, KVCache]:
+    """One token for every sequence in the batch. ``batch["tokens"]: (B, 1)``
+    (or (B, 1, K) for codebooks). Returns (logits, updated cache).
+
+    ``cache.pos`` is per-sequence, so co-batched sequences may sit at
+    different positions (continuous batching)."""
+    return _run_decode(params, cfg, cache, batch, lambda k, v: (k, v))
+
+
+def paged_decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
+                      tables: jax.Array, batch: dict
+                      ) -> tuple[jax.Array, KVCache]:
+    """One token for every slot, straight on the *paged* pool (DESIGN.md §9).
+
+    ``cache`` is the ``cache_ops.paged_init`` layout — ``k``/``v`` leaves
+    are page pools ``(ngroups, P, block, KV, hd)`` — and ``tables`` the
+    shared ``(capacity, max_blocks)`` block table. Each layer scatters its
+    token into its page and attends through the table
+    (``layers.paged_decode_attention``); the ``capacity × max_seq`` dense
+    view of the gather/commit round-trip never exists.
+    """
+    return _run_decode(params, cfg, cache, batch,
+                       lambda k, v: PagedKV(k, v, tables))

@@ -15,14 +15,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from .layers import rms_norm
+from .layers import PagedKV, rms_norm
 from repro.parallel.context import shard_activations
 from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
                      mamba_block, mamba_decode_step)
 from .transformer import _attn_forward, _init_attn, _init_mlp, _mlp_forward
 
 __all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache",
-           "decode_step", "HybridCache", "n_attn_sites"]
+           "decode_step", "paged_decode_step", "HybridCache", "n_attn_sites"]
 
 
 def n_attn_sites(cfg: ModelConfig) -> int:
@@ -105,9 +105,7 @@ def forward_hidden(params: dict, cfg: ModelConfig, batch: dict) -> tuple[jax.Arr
 
 
 def loss_fn(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
-    from .transformer import loss_fn as _tl
-
-    # reuse the chunked-CE plumbing by faking the transformer interface
+    # chunked CE over the hidden states, like the transformer's loss_fn
     hidden, _ = forward_hidden(params, cfg, batch)
     labels = batch["labels"]
     b, s = labels.shape
@@ -195,8 +193,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> HybridCache:
                        pos=jnp.zeros((batch,), jnp.int32))
 
 
-def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
-                batch: dict) -> tuple[jax.Array, HybridCache]:
+def _run_decode(params: dict, cfg: ModelConfig, cache: HybridCache,
+                batch: dict, layer_cache) -> tuple[jax.Array, HybridCache]:
+    """Shared one-token decode over the mamba backbone + shared-attn sites.
+
+    ``layer_cache(k_leaf, v_leaf)`` shapes what each site's attention
+    consumes — a dense ``(k, v)`` pair or a paged
+    :class:`~repro.models.layers.PagedKV` — exactly like
+    ``transformer._run_decode``; the mamba leaves are O(1) per slot and
+    identical in both layouts.
+    """
     x = jnp.take(params["embed"], batch["tokens"], axis=0)   # (B, 1, d)
     pos = jnp.broadcast_to(cache.pos, (x.shape[0],))         # per-sequence
     every = cfg.shared_attn_every
@@ -219,11 +225,11 @@ def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
                                        MambaCache(*mc), cfg)
             x = x + y
             new_m.append(mc2)
-        x, (kc2, vc2) = _shared_block(params["shared"], x, cfg,
-                                      positions=positions,
-                                      cache=(kc, vc), cache_pos=pos)
+        x, kvc = _shared_block(params["shared"], x, cfg,
+                               positions=positions,
+                               cache=layer_cache(kc, vc), cache_pos=pos)
         stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
-        return x, (stacked_m, kc2, vc2)
+        return x, (stacked_m, kvc[0], kvc[1])
 
     x, (new_mamba, ks, vs) = jax.lax.scan(
         group_body, x, (grouped_params, grouped_mamba, cache.k, cache.v))
@@ -232,3 +238,18 @@ def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
     new_mamba = jax.tree.map(
         lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mamba)
     return logits, HybridCache(mamba=MambaCache(*new_mamba), k=ks, v=vs, pos=pos + 1)
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
+                batch: dict) -> tuple[jax.Array, HybridCache]:
+    return _run_decode(params, cfg, cache, batch, lambda k, v: (k, v))
+
+
+def paged_decode_step(params: dict, cfg: ModelConfig, cache: HybridCache,
+                      tables: jax.Array, batch: dict
+                      ) -> tuple[jax.Array, HybridCache]:
+    """One token per slot on the paged pool (DESIGN.md §9): per-site K/V
+    page pools ``(sites, P, block, KV, hd)`` walked through the shared
+    block table; mamba state keeps the slot layout."""
+    return _run_decode(params, cfg, cache, batch,
+                       lambda k, v: PagedKV(k, v, tables))

@@ -8,7 +8,6 @@ applied on the *stored* state; the update math runs in fp32 after dequant.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 

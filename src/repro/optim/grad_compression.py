@@ -22,7 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .adamw import Quantized8, dequantize8, quantize8
+from .adamw import dequantize8, quantize8
 
 __all__ = ["init_error_state", "compress_with_feedback", "compressed_psum"]
 

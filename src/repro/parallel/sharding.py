@@ -25,7 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 __all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "slot_pool_pspecs",
-           "paged_pool_pspecs", "named", "DATA_AXES"]
+           "paged_pool_pspecs", "paged_tables_pspec", "named", "DATA_AXES"]
 
 DATA_AXES = ("pod", "data")          # batch / FSDP axes (pod may be absent)
 
@@ -247,9 +247,10 @@ def paged_pool_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh) -> Any:
     (ROADMAP's multi-host item covers lifting both). TP instead shards KV
     heads — or head_dim when the head count doesn't divide the model axis —
     so every page splits the same way and gather/scatter through the block
-    table stays shard-local along the model axis. Slot leaves (SSM state /
-    conv) likewise keep the slot axis unsharded and shard channels over
-    ``model``.
+    table stays shard-local along the model axis — the same invariant the
+    fused kernel's in-kernel table walk relies on (§9; see
+    :func:`paged_tables_pspec`). Slot leaves (SSM state / conv) likewise
+    keep the slot axis unsharded and shard channels over ``model``.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_size = sizes.get("model", 1)
@@ -272,6 +273,23 @@ def paged_pool_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh) -> Any:
         return fit_spec(raw, leaf.shape, mesh)
 
     return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def paged_tables_pspec(mesh: Mesh) -> P:
+    """PartitionSpec for the ``(capacity, max_blocks)`` block tables.
+
+    Fully replicated, deliberately: the tables are tiny (a few KiB), but —
+    more to the point — the fused paged-attention kernel (DESIGN.md §9)
+    scalar-prefetches the *whole* table on every shard to drive its
+    in-kernel page walk, and the jnp fallback's gather indexes it the same
+    way. The pool's page axis is likewise unsharded (``paged_pool_pspecs``),
+    so a table entry means the same physical page on every shard and the
+    walk only ever touches shard-local bytes along ``model`` (KV heads /
+    head_dim split identically across every page). Sharding either axis of
+    the table would force a pre-kernel all-gather and break that locality.
+    """
+    del mesh
+    return P(None, None)
 
 
 def named(mesh: Mesh, pspecs: Any) -> Any:

@@ -9,9 +9,8 @@ dead, or slow — is exactly this code.
 """
 from __future__ import annotations
 
-import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 __all__ = ["HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",

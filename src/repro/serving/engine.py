@@ -83,24 +83,28 @@ class Engine:
     def __init__(self, cfg, params, *, capacity: int = 4, max_seq: int = 256,
                  mesh: Mesh | None = None, continuous: bool = True,
                  paged: bool = True, block: int = 64,
-                 n_blocks: int | None = None):
+                 n_blocks: int | None = None, fused: bool = True):
         cfg.validate()
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
         self.continuous = continuous
         self.paged = paged
+        self.fused = fused and paged
         self.mesh = mesh if mesh is not None else default_serving_mesh()
         self._m = bind(cfg)
 
         if paged:
             # one derivation (PagedSlotPool.plan) shapes both the compiled
-            # step and the pool's host bookkeeping — they must never diverge
+            # step and the pool's host bookkeeping — they must never diverge.
+            # fused=True (default) decodes straight on the page pool
+            # (DESIGN.md §9, attention through the block table); fused=False
+            # keeps the gather→decode→commit round-trip as the memory A/B.
             block, max_blocks, n_blocks = PagedSlotPool.plan(
                 capacity, max_seq, block, n_blocks)
             self._decode, shardings, _ = cached_paged_decode_step(
                 cfg, self.mesh, capacity=capacity, block=block,
-                n_blocks=n_blocks, max_blocks=max_blocks)
+                n_blocks=n_blocks, max_blocks=max_blocks, fused=self.fused)
             self._params = jax.device_put(params, shardings["params"])
             data = jax.device_put(
                 cache_ops.paged_init(self._m.init_cache, capacity, n_blocks,
@@ -317,5 +321,6 @@ class Engine:
                 "n_blocks": self.pool.n_blocks,
                 "pages_in_use": self.pool.pages_in_use,
                 "peak_pages": self.pool.peak_pages,
+                "decode_path": "fused" if self.fused else "gather",
             })
         return out

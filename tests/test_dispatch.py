@@ -14,7 +14,7 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import SHAPES, sc_gemm_problems
 from repro.core import recover_counts, sc_dense
-from repro.core.sc_matmul import IMPL_ENV, SC_IMPLS, resolve_impl, sc_matmul
+from repro.core.sc_matmul import IMPL_ENV, resolve_impl, sc_matmul
 from repro.core.sc_layers import _sc_dense_fwd
 from repro.models import bind
 

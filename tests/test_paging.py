@@ -26,7 +26,7 @@ import pytest
 from _propcheck import given, settings, st
 from repro.configs.base import ModelConfig
 from repro.launch.serve import generate
-from repro.models import bind, cache_ops
+from repro.models import bind
 from repro.serving import (Engine, PagedSlotPool, PoolExhausted, Request,
                            SlotEntry, SlotPool)
 

@@ -20,7 +20,7 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.launch.serve import generate
 from repro.models import bind
-from repro.models.cache_ops import slot_insert, slot_read
+from repro.models.cache_ops import slot_insert
 from repro.serving import (Engine, PoolExhausted, Request, RequestQueue,
                            SlotEntry, SlotPool)
 

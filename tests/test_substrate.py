@@ -182,7 +182,6 @@ def test_supervisor_restart_plan():
 # ------------------------------------------------------------------- pipeline
 
 def test_pipeline_parallel_matches_sequential():
-    import os
     if jax.device_count() < 4:
         pytest.skip("needs >= 4 devices (run in dry-run env)")
 
