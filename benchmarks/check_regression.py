@@ -8,12 +8,17 @@ with the same (backend, interpret, smoke) signature — in CI that is the last
 committed record, since the smoke benches append their own runs first — and
 fails when any shared timing row regresses by more than ``--factor``
 (default 2x, generous because shared CI runners are noisy). Rows with
-``us_per_call == 0`` (bit-exactness / step-ratio markers) are skipped, as
-are rows where *both* timings sit under ``--min-us``: sub-half-millisecond
-rows are scheduler-noise-dominated on shared runners (back-to-back local
-runs show >2.5x swings) and a regression that stays below the floor is not
-actionable anyway. A missing serving trajectory is not an error (the gate
-predates it on old branches).
+``us_per_call == 0`` (bit-exactness / step-ratio / chunked-prefill markers)
+are skipped, as are rows where *both* timings sit under ``--min-us``:
+sub-half-millisecond rows are scheduler-noise-dominated on shared runners
+(back-to-back local runs show >2.5x swings) and a regression that stays
+below the floor is not actionable anyway. Serving rows additionally carry
+``ttft_p50_ms`` / ``itl_p50_ms`` columns (time to first token,
+inter-token latency); these are informational trajectory data, never
+gated — only ``us_per_call`` is compared, because single-request latency
+percentiles on a tiny smoke workload are dominated by the same scheduler
+noise the ``--min-us`` floor exists for. A missing serving trajectory is
+not an error (the gate predates it on old branches).
 
 Caveat: the signature carries no machine identity, so the last committed
 record may come from different hardware than the CI runner (each record's
@@ -57,7 +62,11 @@ def find_baseline(runs: list[dict]) -> tuple[dict, dict | None]:
 def compare(latest: dict, baseline: dict, *,
             factor: float = DEFAULT_FACTOR,
             min_us: float = DEFAULT_MIN_US) -> list[str]:
-    """Human-readable failure lines for every row slower than factor·baseline."""
+    """Human-readable failure lines for every row slower than factor·baseline.
+
+    Only ``us_per_call`` is gated; any other per-row columns (``derived``,
+    ``ttft_p50_ms``, ``itl_p50_ms``) ride along as trajectory data.
+    """
     base_us = {r["name"]: r["us_per_call"] for r in baseline.get("rows", [])
                if r.get("us_per_call", 0) > 0}
     failures = []

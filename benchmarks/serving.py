@@ -8,8 +8,12 @@ trajectory.
 Rows encode throughput as ``us_per_call`` = µs per *generated token*
 (1e6 / tok/s), so ``benchmarks.check_regression`` gates a >2x tok/s drop with
 the exact machinery that gates the SC-GEMM kernel rows: lower is better,
-matching-signature baselines, noise floor. ``derived`` carries the human
-numbers (tok/s, latency percentiles, decode steps, pages in use).
+matching-signature baselines, noise floor. Timed serving rows also carry
+``ttft_p50_ms`` / ``itl_p50_ms`` as first-class columns — time to first
+token and inter-token latency, the two numbers a streaming caller feels —
+which the gate treats as informational (only ``us_per_call`` is compared).
+``derived`` carries the remaining human numbers (tok/s, latency
+percentiles, decode steps, pages in use).
 
 A second, gate-exempt marker row records the **long-tail acceptance**
 (ISSUE 4 / DESIGN.md §8): a workload whose tail request exceeds the
@@ -17,6 +21,16 @@ per-slot stripe of a contiguous pool under a fixed token budget — the
 contiguous engine must refuse it with ``PoolExhausted`` while the paged
 engine drains it inside the same budget by giving the tail many pages and
 the short requests few.
+
+A gate-exempt marker row records the **chunked-vs-one-shot prefill A/B**
+(ISSUE 6 / DESIGN.md §10) on a varied-prompt-length workload: one-shot
+admission stalls the whole decode batch for a full-prompt forward, while
+chunked prefill bounds the worst gap between consecutive decode steps to
+roughly one chunk — the row reports both ``max_decode_gap`` numbers, and
+asserts that both modes generate bit-identical streams and that the
+prompt-bucket set bounds the number of chunked-prefill executables
+(``prefill_executables <= len(buckets)``), so the smoke CI job fails if
+bucketing ever starts compiling per prompt length.
 
 A third, gate-exempt marker row records the **gather-vs-fused decode A/B**
 (ISSUE 5 / DESIGN.md §9): the same paged workload through the PR 4
@@ -94,9 +108,13 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
         rows.append({
             "name": f"serving/{mode}/{cfg.name}",
             "us_per_call": round(1e6 / st["tok_per_s"], 1),
+            "ttft_p50_ms": round(st["ttft_p50_s"] * 1e3, 1),
+            "itl_p50_ms": round(st["itl_p50_s"] * 1e3, 2),
             "derived": (f"tok_s={st['tok_per_s']:.1f}"
                         f" p50_ms={st['p50_latency_s'] * 1e3:.0f}"
                         f" p99_ms={st['p99_latency_s'] * 1e3:.0f}"
+                        f" ttft_p99_ms={st['ttft_p99_s'] * 1e3:.0f}"
+                        f" itl_p99_ms={st['itl_p99_s'] * 1e3:.2f}"
                         f" decode_steps={st['decode_steps']}"
                         f" requests={st['requests']}"
                         f" capacity={capacity}{pages}"),
@@ -111,11 +129,75 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                     f" static={stat['decode_steps']}"
                     f" ratio={cont['decode_steps'] / max(stat['decode_steps'], 1):.2f}"),
     })
+    rows.append(_chunked_row(cfg, params, mesh, capacity, prompt_len,
+                             max_gen))
     rows.append(_longtail_row(cfg, params, mesh, capacity, prompt_len,
                               max_gen))
     rows.append(_fused_row(cfg, params, mesh, n, capacity, prompt_len,
                            max_gen))
     return rows
+
+
+def _chunked_row(cfg, params, mesh, capacity: int, prompt_len: int,
+                 max_gen: int) -> dict:
+    """Chunked-vs-one-shot prefill marker (gate-exempt): a varied-length
+    long-prompt workload where one-shot admission stalls every live decode
+    slot for a whole-prompt forward, while chunked prefill interleaves —
+    at most one chunk of prefill per decode step. ``max_decode_gap`` (the
+    worst wall-clock gap between consecutive decode-step completions) is
+    the stall each mode imposes on co-batched streams. Hard-asserted, not
+    timed: both modes emit bit-identical streams, and the chunked
+    executable count stays bounded by the bucket set even though the
+    workload has more distinct prompt lengths than buckets get used."""
+    from repro.serving import Engine, Request
+
+    chunk = max(prompt_len // 2, 4)
+    lens = [4 * prompt_len, prompt_len, 2 * prompt_len, prompt_len + 3,
+            3 * prompt_len, prompt_len // 2 + 1]
+    max_seq = max(lens) + max_gen
+
+    def requests():
+        rng = np.random.default_rng(23)
+        out = []
+        for i, s in enumerate(lens + lens):
+            shape = (s, cfg.n_codebooks) if cfg.n_codebooks else (s,)
+            out.append(Request(
+                uid=f"chunk-{i}",
+                prompt=rng.integers(0, cfg.vocab_size, size=shape,
+                                    dtype=np.int32),
+                max_new_tokens=max_gen))
+        return out
+
+    stats, streams = {}, {}
+    for mode in ("oneshot", "chunked"):
+        for _ in range(2):             # first run compiles, second times
+            engine = Engine(cfg, params, capacity=capacity, max_seq=max_seq,
+                            mesh=mesh, prefill_mode=mode, chunk=chunk)
+            results = engine.run(requests())
+        stats[mode] = engine.stats
+        streams[mode] = [r.tokens.tolist() for r in results]
+    assert streams["chunked"] == streams["oneshot"], \
+        "chunked prefill changed a token stream vs one-shot"
+    st = stats["chunked"]
+    assert st["prefill_executables"] <= len(st["buckets"]), \
+        (f"prompt bucketing failed to bound compilation: "
+         f"{st['prefill_executables']} chunked-prefill executables > "
+         f"{len(st['buckets'])} buckets")
+    return {
+        "name": f"serving/chunked_prefill/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (
+            f"chunked_gap_ms={st['max_decode_gap_s'] * 1e3:.1f}"
+            f" oneshot_gap_ms="
+            f"{stats['oneshot']['max_decode_gap_s'] * 1e3:.1f}"
+            f" chunk={st['chunk']}"
+            f" prefill_chunks={st['prefill_chunks']}"
+            f" executables={st['prefill_executables']}"
+            f"/{len(st['buckets'])}buckets"
+            f" prompt_lens={len(set(lens))}"
+            f" ttft_p50_ms={st['ttft_p50_s'] * 1e3:.0f}"
+            f" itl_p50_ms={st['itl_p50_s'] * 1e3:.2f}"),
+    }
 
 
 def _gather_transient_bytes(cfg, capacity: int, block: int,
@@ -257,9 +339,10 @@ def main() -> None:
     args = ap.parse_args()
 
     rows = run(smoke=args.smoke, arch=args.arch)
-    print("name,us_per_call,derived")
+    print("name,us_per_call,ttft_p50_ms,itl_p50_ms,derived")
     for row in rows:
         print(f"{row['name']},{row['us_per_call']},"
+              f"{row.get('ttft_p50_ms', '')},{row.get('itl_p50_ms', '')},"
               f"{str(row['derived']).replace(',', ';')}")
     try:
         append_trajectory(args.json, rows, smoke=args.smoke)

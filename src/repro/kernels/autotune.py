@@ -155,10 +155,14 @@ class PagedFlashConfig:
 
     def vmem_bytes(self, *, max_blocks: int, block: int, g: int,
                    d: int) -> int:
-        """Per-step working set: score + fp32 V scratch (whole row) plus the
-        q/k/v/out tiles of one page step."""
+        """Per-step working set: whole-row scratch plus the q/k/v/out tiles
+        of one page step. Full-MHA (``g == 1``) swaps the score scratch for
+        a raw K-page buffer of the same row extent (scored whole-row at the
+        finish step; 4 bytes/elt is an upper bound — bf16 caches halve it)."""
         s_len = max_blocks * block
-        return 4 * (self.kvh * g * s_len          # score scratch
+        scratch0 = (s_len * self.kvh * d if g == 1   # raw K buffer
+                    else self.kvh * g * s_len)       # score scratch
+        return 4 * (scratch0
                     + s_len * self.kvh * d        # fp32 V scratch
                     + 2 * self.kvh * g * d        # q + out tiles
                     + 2 * block * self.kvh * d)   # k + v tiles
@@ -425,10 +429,12 @@ def candidate_paged_configs(kv: int, g: int, d: int, *, block: int,
     """KV-heads-per-step grid for the paged decode kernel: every divisor of
     the KV head count whose tiles + whole-row scratch fit the VMEM budget.
 
-    Full-MHA layouts (``g == 1``) drop ``kvh = 1`` — the bit-identity
-    envelope needs a ≥ 2 extent on at least one of the (kvh, g) dims (see
-    kernels/paged_attention.py), and the dispatch gate rejects ``g == 1``
-    anyway; the candidate grid stays consistent with it.
+    Full-MHA layouts (``g == 1``) drop ``kvh = 1`` — the whole-row score
+    einsum that keeps ``g == 1`` in the bit-identity envelope needs ≥ 2 KV
+    heads per grid step (a single-head slice lowers to a different
+    contraction; see kernels/paged_attention.py, which rejects the combo).
+    Single-KV-head full-MHA (``kv == 1``) therefore yields an empty grid,
+    which the dispatch gate reads as "fall back to the gather path".
     """
     out = []
     for kvh in (1, 2, 4, 8, 16):

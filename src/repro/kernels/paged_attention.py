@@ -32,14 +32,21 @@ the work.
 
 **Exactness envelope** (verified by tests/test_paged_attention.py): bitwise
 equality with the gathered-dense path holds for GQA head layouts
-(``H // KV ≥ 2``), with or without sliding windows, fp32 or bf16. Two
-regimes fall outside it and are dispatch-ineligible in
+(``H // KV ≥ 2``) and — since the whole-row variant below — full-MHA
+``H == KV``, with or without sliding windows, fp32 or bf16. At ``G == 1``
+XLA collapses the dense path's size-1 group dim into contraction shapes a
+per-page score call cannot mimic, so that path buffers *raw* K pages in
+scratch instead and runs one whole-row score einsum at the last page —
+operand shapes exactly as the gathered path's per-slot slice, which is
+bitwise (it also needs ``kvh ≥ 2`` per grid step: a single-head slice
+lowers differently, so ``autotune.candidate_paged_configs`` never proposes
+``G == 1, kvh == 1`` and this function rejects it). Two regimes remain
+outside the envelope and are dispatch-ineligible in
 ``models.layers.paged_decode_attention`` (mirroring the flash kernel's
 feature gate): logit softcap — the ``tanh`` chain fuses differently in the
-two programs — and full-MHA ``H == KV``, where XLA collapses the dense
-path's size-1 group dim into contraction shapes this kernel cannot mimic
-page-wise. Both fall back to the per-layer gather, which still avoids the
-all-layer dense transient the pre-fused path materialized.
+two programs — and single-KV-head full-MHA (``KV == 1``), where no
+``kvh ≥ 2`` split exists. Both fall back to the per-layer gather, which
+still avoids the all-layer dense transient the pre-fused path materialized.
 
 Layout: ``q (C, KV, G, D)`` — one token per slot, heads grouped per KV head
 (head ``h`` of the layer layout is ``(h // G, h % G)``); ``k_pages,
@@ -72,54 +79,86 @@ NEG_INF = -1e30
 
 def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
             logit_softcap: float | None,
-            tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref, s_ref, vb_ref):
+            tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref, sk_ref, vb_ref):
     ci = pl.program_id(0)
     ji = pl.program_id(2)
     qpos = qpos_ref[ci]
     page_start = ji * block
+    g = q_ref.shape[2]
+    kvh = q_ref.shape[1]
+    s_len = max_blocks * block
 
-    # A page whose every position masks out contributes exactly the -1e30
-    # scores / zero-weighted V rows the dense path computes for it — write
-    # those tiles directly and skip both dot products.
-    fully_masked = page_start > qpos
-    if window is not None:
-        fully_masked |= qpos - (page_start + block - 1) >= window
-
-    @pl.when(jnp.logical_not(fully_masked))
-    def _score():
-        q = q_ref[...]                               # (1, kvh, g, d)
-        k = k_ref[...]                               # (1, block, kvh, d)
-        # literally the dense path's score einsum — same dim structure
-        # ("bqcgd,bkcd->bcgqk" with b=1, q folded into the lead axis), so
-        # XLA lowers the same contraction micro-kernel and the bits match
-        s = jnp.einsum("bqcgd,bkcd->bcgqk", q[None], k,
-                       preferred_element_type=jnp.float32) * scale
-        s = s[0, :, :, 0]                            # (kvh, g, block)
-        if logit_softcap is not None:
-            s = logit_softcap * jnp.tanh(s / logit_softcap)
-        kpos = page_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
-        mask = kpos <= qpos
-        if window is not None:
-            mask &= (qpos - kpos) < window
-        s_ref[ji] = jnp.where(mask, s, NEG_INF)
+    if g == 1:
+        # Full-MHA path: per-page score tiles are NOT in the bit-identity
+        # envelope here — with a size-1 group dim XLA lowers the dense
+        # path's score einsum to a contraction whose bits a block-length
+        # call cannot reproduce. Instead buffer the raw K page (the trash
+        # redirect in the BlockSpec index map already mirrors the gather)
+        # and run ONE whole-row score einsum at the last page, which IS
+        # bit-identical to the gathered-dense call (empirically: per-slot
+        # b=1 whole-row calls match; per-page calls and kvh=1 slices do
+        # not — hence the kvh >= 2 requirement enforced at dispatch).
+        sk_ref[ji] = k_ref[0]
         vb_ref[ji] = v_ref[0].astype(jnp.float32)
+    else:
+        # A page whose every position masks out contributes exactly the
+        # -1e30 scores / zero-weighted V rows the dense path computes for
+        # it — write those tiles directly and skip both dot products.
+        fully_masked = page_start > qpos
+        if window is not None:
+            fully_masked |= qpos - (page_start + block - 1) >= window
 
-    @pl.when(fully_masked)
-    def _skip():
-        s_ref[ji] = jnp.full_like(s_ref[ji], NEG_INF)
-        vb_ref[ji] = jnp.zeros_like(vb_ref[ji])
+        @pl.when(jnp.logical_not(fully_masked))
+        def _score():
+            q = q_ref[...]                           # (1, kvh, g, d)
+            k = k_ref[...]                           # (1, block, kvh, d)
+            # literally the dense path's score einsum — same dim structure
+            # ("bqcgd,bkcd->bcgqk" with b=1, q folded into the lead axis),
+            # so XLA lowers the same contraction micro-kernel and the bits
+            # match
+            s = jnp.einsum("bqcgd,bkcd->bcgqk", q[None], k,
+                           preferred_element_type=jnp.float32) * scale
+            s = s[0, :, :, 0]                        # (kvh, g, block)
+            if logit_softcap is not None:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            kpos = page_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 2)
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= (qpos - kpos) < window
+            sk_ref[ji] = jnp.where(mask, s, NEG_INF)
+            vb_ref[ji] = v_ref[0].astype(jnp.float32)
+
+        @pl.when(fully_masked)
+        def _skip():
+            sk_ref[ji] = jnp.full_like(sk_ref[ji], NEG_INF)
+            vb_ref[ji] = jnp.zeros_like(vb_ref[ji])
 
     @pl.when(ji == max_blocks - 1)
     def _finish():
-        kvh = s_ref.shape[1]
-        s_len = max_blocks * block
-        # Exact softmax over the full row. The reductions must run over a
-        # trailing S axis in page-major position order — reducing the raw
-        # (MB, kvh, g, block) scratch over (0, 3) associates the sum
-        # differently and drifts 1-2 ulp off the dense jax.nn.softmax.
-        # The transposes/reshapes themselves are bit-exact.
-        s = s_ref[...].transpose(1, 2, 0, 3).reshape(
-            1, kvh, -1, 1, s_len)                    # (1, kvh, g, 1, S)
+        if g == 1:
+            # whole-row scores over the buffered pages, flattened back to
+            # the dense S axis — operand shapes exactly as the gathered
+            # path's b=1 slice, so the lowering (and the bits) coincide
+            k = sk_ref[...].reshape(1, s_len, kvh, -1)
+            s = jnp.einsum("bqcgd,bkcd->bcgqk", q_ref[...][None], k,
+                           preferred_element_type=jnp.float32) * scale
+            if logit_softcap is not None:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            kpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+            mask = kpos <= qpos
+            if window is not None:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask, s, NEG_INF)          # (1, kvh, 1, 1, S)
+        else:
+            # Exact softmax over the full row. The reductions must run
+            # over a trailing S axis in page-major position order —
+            # reducing the raw (MB, kvh, g, block) scratch over (0, 3)
+            # associates the sum differently and drifts 1-2 ulp off the
+            # dense jax.nn.softmax. The transposes/reshapes themselves are
+            # bit-exact.
+            s = sk_ref[...].transpose(1, 2, 0, 3).reshape(
+                1, kvh, -1, 1, s_len)                # (1, kvh, g, 1, S)
         m = jnp.max(s, axis=-1, keepdims=True)
         un = jnp.exp(s - m)
         denom = jnp.sum(un, axis=-1, keepdims=True)
@@ -156,6 +195,13 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
         # a non-dividing kvh would truncate the head grid and return
         # uninitialized output rows for the remainder — fail loudly instead
         raise ValueError(f"kvh={kvh} must divide the KV head count {kv}")
+    if g == 1 and kvh == 1:
+        # the full-MHA whole-row einsum only reproduces the dense bits when
+        # the grid step carries >= 2 KV heads (a single-head slice lowers to
+        # a different contraction) — candidate_paged_configs never proposes
+        # this point; refuse direct calls rather than return close-but-off
+        raise ValueError("full-MHA (G == 1) requires kvh >= 2 for "
+                         "bit-identity; got kvh=1")
 
     def qmap(ci, hi, ji, tbl, qp):
         return (ci, hi, 0, 0)
@@ -175,7 +221,12 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, kvh, g, d), qmap),
         scratch_shapes=[
-            pltpu.VMEM((max_blocks, kvh, g, block), jnp.float32),  # scores
+            # g >= 2: masked per-page score tiles. g == 1 (full-MHA): raw K
+            # pages in the cache dtype — scoring happens whole-row at the
+            # finish step (see _kernel), so no cast may touch K before it.
+            pltpu.VMEM((max_blocks, block, kvh, d), k_pages.dtype)
+            if g == 1 else
+            pltpu.VMEM((max_blocks, kvh, g, block), jnp.float32),
             pltpu.VMEM((max_blocks, block, kvh, d), jnp.float32),  # fp32 V
         ],
     )

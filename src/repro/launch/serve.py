@@ -113,6 +113,20 @@ def main() -> None:
                     help="paged decode through the gather→decode→commit "
                          "round-trip instead of attending on the page pool "
                          "directly (the memory A/B)")
+    ap.add_argument("--prefill-mode", choices=("chunked", "oneshot"),
+                    default="chunked",
+                    help="chunked: interleave bounded prefill chunks with "
+                         "decode steps (DESIGN.md §10); oneshot: whole-prompt "
+                         "prefill at admission (the scheduling A/B)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk length in tokens (rounded up to a "
+                         "cfg.ssm_chunk multiple for ssm/hybrid)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prefill tokens per engine step (default: one chunk)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the engine through per-request token "
+                         "callbacks and print an SSE-style event feed as "
+                         "tokens land, instead of waiting for run() to drain")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -144,20 +158,42 @@ def main() -> None:
                     max_seq=args.prompt_len + args.gen,
                     continuous=not args.no_continuous,
                     paged=not args.no_paged, block=args.block,
-                    n_blocks=args.pages, fused=not args.no_fused_paged)
+                    n_blocks=args.pages, fused=not args.no_fused_paged,
+                    prefill_mode=args.prefill_mode, chunk=args.chunk,
+                    prefill_budget=args.prefill_budget)
     t0 = time.time()
-    results = engine.run(requests)
+    if args.stream:
+        # SSE-style feed: one `data:` line per emitted token, as it lands
+        # (including bit-identical replays after a preemption). run() then
+        # just drains the already-submitted queue and collects stats.
+        def on_token(uid, index, tok, reason):
+            tail = f" finish={reason}" if reason else ""
+            print(f"data: {{uid: {uid}, index: {index}, "
+                  f"token: {np.asarray(tok).tolist()}}}{tail}")
+        for r in requests:
+            engine.submit(r, on_token=on_token)
+        results = engine.run()
+        results.sort(key=lambda r: int(r.uid.rsplit("-", 1)[1]))
+    else:
+        results = engine.run(requests)
     dt = time.time() - t0
     st = engine.stats
     pages = (f", pages peak {st['peak_pages']}/{st['n_blocks']}"
              f" (block {st['block']}, {st['preemptions']} preemptions)"
              if st["layout"] == "paged" else "")
-    print(f"[serve] {st['mode']}/{st['layout']}: {st['requests']} requests, "
+    print(f"[serve] {st['mode']}/{st['layout']}/{st['prefill_mode']}: "
+          f"{st['requests']} requests, "
           f"{st['generated_tokens']} tokens in {dt:.1f}s "
           f"({st['tok_per_s']:.1f} tok/s incl. compile), "
           f"{st['decode_steps']} decode steps, "
           f"p50 {st['p50_latency_s'] * 1e3:.0f}ms "
-          f"p99 {st['p99_latency_s'] * 1e3:.0f}ms{pages}")
+          f"p99 {st['p99_latency_s'] * 1e3:.0f}ms, "
+          f"ttft p50 {st['ttft_p50_s'] * 1e3:.0f}ms "
+          f"itl p50 {st['itl_p50_s'] * 1e3:.1f}ms, "
+          f"max decode gap {st['max_decode_gap_s'] * 1e3:.0f}ms "
+          f"({st['prefill_chunks']} prefill chunks, "
+          f"{st['prefill_executables']} executables / "
+          f"{len(st['buckets'])} buckets){pages}")
     print(f"[serve] first stream: {results[0].tokens[:16]}")
 
 

@@ -23,10 +23,11 @@ from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
                                      param_pspecs)
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
-           "build_paged_decode_step", "cached_prefill_step",
-           "cached_decode_step", "cached_paged_decode_step",
-           "abstract_params", "abstract_opt_state", "activation_spec",
-           "opt_pspecs"]
+           "build_paged_decode_step", "build_chunked_prefill_step",
+           "cached_prefill_step", "cached_decode_step",
+           "cached_paged_decode_step", "cached_chunked_prefill_step",
+           "prompt_buckets", "bucket_for", "abstract_params",
+           "abstract_opt_state", "activation_spec", "opt_pspecs"]
 
 
 def _data_axes(mesh: Mesh):
@@ -258,6 +259,74 @@ def build_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
     return jitted, shardings, params_abs
 
 
+def prompt_buckets(max_seq: int, chunk: int) -> tuple[int, ...]:
+    """The padded prompt-length set for chunked prefill: powers-of-two
+    multiples of ``chunk`` (pow2-style, mirroring ``kernels.autotune``'s
+    skinny-M buckets), capped at the smallest chunk multiple covering
+    ``max_seq``. Every bucket is a chunk multiple so a prompt's chunk
+    sequence always fits its bucket's staging extent, and the compiled
+    prefill-executable count is bounded by ``len(prompt_buckets(...))`` —
+    not by the workload's prompt-length distribution."""
+    if chunk < 1 or max_seq < 1:
+        raise ValueError(f"need chunk/max_seq >= 1, got {chunk}/{max_seq}")
+    top = -(-max_seq // chunk) * chunk
+    out = []
+    b = chunk
+    while b < top:
+        out.append(b)
+        b *= 2
+    out.append(top)
+    return tuple(out)
+
+
+def bucket_for(prompt_len: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket covering ``prompt_len``."""
+    for b in buckets:
+        if b >= prompt_len:
+            return b
+    raise ValueError(f"prompt of {prompt_len} tokens exceeds the largest "
+                     f"bucket {buckets[-1]}")
+
+
+def build_chunked_prefill_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+                               chunk: int):
+    """Chunked prefill over a B=1 staging cache of extent ``seq_len`` (a
+    prompt bucket). Signature: ``step(params, cache, batch) -> (logits,
+    cache)`` with ``batch = {"tokens": (1, chunk), "n_valid": (1,)}`` —
+    the cache is donated, so a prompt's chunks thread one buffer. One
+    executable per (cfg, mesh, bucket, chunk); the per-slot offset is the
+    cache's own ``pos``, a runtime value, so chunk position never
+    recompiles (DESIGN.md §10)."""
+    m = bind(cfg)
+    act_spec = activation_spec(mesh, cfg.sharding_strategy)
+
+    def step(params, cache, batch):
+        with activation_sharding_scope(NamedSharding(mesh, act_spec)):
+            return m.prefill_chunk_step(params, cache, batch)
+
+    params_abs = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    cache_abs = jax.eval_shape(lambda: m.init_cache(1, seq_len))
+    cache_sh = named(mesh, cache_pspecs(cfg, cache_abs, mesh, batch_size=1))
+    data = _data_axes(mesh)
+    from repro.parallel.sharding import fit_spec
+    if cfg.n_codebooks:
+        logits_shape = (1, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        logits_shape = (1, 1, cfg.vocab_size)
+    logits_sh = NamedSharding(
+        mesh, fit_spec(P(*((data,) + (None,) * (len(logits_shape) - 1))),
+                       logits_shape, mesh))
+    shardings = {
+        "params": named(mesh, p_specs),
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
+        "cache": cache_sh,
+    }
+    jitted = jax.jit(step, donate_argnums=(1,),
+                     out_shardings=(logits_sh, cache_sh))
+    return jitted, shardings, params_abs
+
+
 # Compiled-step reuse: a serving engine admits requests one at a time, and a
 # naive driver that rebuilds its jitted closures per request (the old
 # serve.py::generate) throws away XLA's executable cache on every call.
@@ -277,6 +346,16 @@ def cached_decode_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,
                        seq_len: int):
     return build_decode_step(cfg, mesh, batch_size=batch_size,
                              seq_len=seq_len)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_chunked_prefill_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+                                chunk: int):
+    """Memoized on (cfg, mesh, bucket, chunk): with bucketed admission the
+    number of live entries — and therefore compiled prefill executables —
+    is bounded by ``len(prompt_buckets(max_seq, chunk))``, the invariant
+    the serving benchmark asserts."""
+    return build_chunked_prefill_step(cfg, mesh, seq_len=seq_len, chunk=chunk)
 
 
 @functools.lru_cache(maxsize=64)

@@ -51,9 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
-           "paged_init", "paged_gather", "paged_commit", "paged_insert",
-           "paged_evict", "paged_read", "paged_token_entry", "SLOT_AXIS",
-           "SEQ_FIELDS"]
+           "truncate_seq", "paged_init", "paged_gather", "paged_commit",
+           "paged_insert", "paged_evict", "paged_read", "paged_token_entry",
+           "SLOT_AXIS", "SEQ_FIELDS"]
 
 #: The slot (batch) dimension of every non-``pos`` cache leaf.
 SLOT_AXIS = 1
@@ -144,6 +144,25 @@ def slot_evict(pool: Any, slot) -> Any:
 def slot_positions(pool: Any) -> jax.Array:
     """The pool's per-slot ``(B,)`` position vector."""
     return pool.pos
+
+
+def truncate_seq(single: Any, length: int) -> Any:
+    """Slice a single-sequence cache's sequence leaves down to ``length``
+    positions (token axis 2); slot leaves and ``pos`` pass through.
+
+    The bridge from a bucket-padded chunked-prefill staging cache (sequence
+    extent = the prompt's padded bucket, tail rows garbage or zero) to the
+    exact-extent prefill cache :func:`slot_insert` / :func:`paged_insert`
+    expect, so pool page accounting sees ``pages_for(prompt_len)`` — not the
+    bucket — and pool contents stay a pure function of the live requests.
+    ``length`` must be a host int (the slice is static).
+    """
+    def one(path, leaf):
+        if _is_seq(path) and not _is_pos(path):
+            return leaf[:, :, :length]
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, single)
 
 
 # --------------------------------------------------------------------------

@@ -310,16 +310,17 @@ def _paged_kernel_eligible(g: int, d: int, block: int,
                            max_blocks: int = 1) -> bool:
     """Layouts the fused paged kernel serves *bit-identically* to the
     gathered-dense path (kernels/paged_attention.py): GQA head grouping
-    (g ≥ 2 — full-MHA collapses the dense einsum's group dim into
-    contraction shapes the page-wise kernel cannot reproduce bitwise) and
-    no logit softcap (the tanh chain fuses differently per program).
-    Compiled TPU additionally needs MXU/sublane-aligned extents; interpret
-    mode executes the same jnp ops and has no alignment constraint. The
-    tuning grid must also be non-empty — a whole-row scratch too big for
-    the VMEM budget (huge ``max_blocks · block``) has no valid candidate,
-    and the dispatch must fall back to the gather rather than let the
-    tuner raise mid-trace."""
-    if g < 2 or logit_softcap is not None:
+    (g ≥ 2, per-page score tiles) and — via the whole-row finish einsum —
+    full-MHA (g == 1, which needs kvh ≥ 2 per grid step and therefore
+    kv ≥ 2); no logit softcap (the tanh chain fuses differently per
+    program). Compiled TPU additionally needs MXU/sublane-aligned extents;
+    interpret mode executes the same jnp ops and has no alignment
+    constraint. The tuning grid must also be non-empty — single-KV-head
+    full-MHA has no kvh ≥ 2 split, and a whole-row scratch too big for
+    the VMEM budget (huge ``max_blocks · block``) has no valid candidate;
+    either way the dispatch must fall back to the gather rather than let
+    the tuner raise mid-trace."""
+    if logit_softcap is not None:
         return False
     if not (interpret or (d % 128 == 0 and block % 8 == 0)):
         return False
@@ -341,8 +342,9 @@ def paged_decode_attention(q: jax.Array, paged: PagedKV, *,
     in-kernel on TPU when :func:`_paged_kernel_eligible` holds,
     "pallas_tuned" forces the kernel on every eligible call regardless of
     backend (interpret off TPU — the bit-identity tests), "jnp" forces the
-    gathered-dense formulation. Ineligible calls (softcap layers, full-MHA
-    head layouts) always gather — per layer, never the whole cache tree.
+    gathered-dense formulation. Ineligible calls (softcap layers,
+    single-KV-head full-MHA) always gather — per layer, never the whole
+    cache tree.
     """
     if kernel_impl not in ("auto", "jnp", "pallas_tuned"):
         raise ValueError(f"unknown paged attention kernel_impl "

@@ -22,7 +22,7 @@ from repro.core.sc_layers import sc_proj as _proj
 from .layers import rms_norm
 
 __all__ = ["init_mamba_params", "mamba_block", "mamba_decode_step",
-           "init_mamba_cache", "MambaCache"]
+           "mamba_chunk_step", "init_mamba_cache", "MambaCache"]
 
 
 class MambaCache(NamedTuple):
@@ -166,6 +166,73 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
     return MambaCache(
         conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
         state=jnp.zeros((batch, heads, cfg.ssm_headdim, n), jnp.float32))
+
+
+def _causal_conv_carry(x: jax.Array, w: jax.Array, b: jax.Array,
+                       carry: jax.Array) -> jax.Array:
+    """:func:`_causal_conv` continued from ``carry`` — the raw (pre-silu)
+    conv-channel rows immediately preceding ``x``.
+
+    Accumulates lag terms in the same order as :func:`_causal_conv`, so a
+    chunk whose carry rows are all zero (a sequence's first chunk) matches
+    the zero-padded one-shot conv bitwise.
+    """
+    width = w.shape[0]
+    ext = jnp.concatenate([carry, x], axis=1)    # (B, width-1 + T, C)
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = ext[:, width - 1 - i: width - 1 - i + x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def mamba_chunk_step(params: dict, x: jax.Array, cache: MambaCache,
+                     cfg: ModelConfig, n_valid) -> tuple[jax.Array, MambaCache]:
+    """Chunked-prefill continuation: run ``x: (B, T, d)`` against ``cache``.
+
+    Bit-identical to the corresponding rows of a one-shot
+    :func:`mamba_block` as long as every chunk boundary lands on a multiple
+    of ``cfg.ssm_chunk`` (``T % ssm_chunk == 0``, enforced by the serving
+    engine's chunk size): the SSD inter-chunk ``lax.scan`` recurrence is the
+    same computation whether the scan is split across calls (state carried
+    via ``initial_state``) or run in one.
+
+    ``n_valid`` (traced int32 scalar, ``1 ≤ n_valid ≤ T``) marks how many
+    rows of the chunk are real prompt tokens; trailing pad rows are
+    neutralized by forcing their ``dt`` to 0 after softplus (zero state
+    contribution, exp(0)=1 decay pass-through) and the conv carry is sliced
+    to end at the last *valid* row, so padded final chunks leave the cache
+    exactly where a shorter one-shot prefill would.
+    """
+    d_in, heads, n, conv_ch = _dims(cfg)
+    zxbcdt = _proj(x, params["in_proj"], cfg)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    xbc_raw = jnp.concatenate([xin, bmat, cmat], -1)
+    ext = jnp.concatenate([cache.conv.astype(xbc_raw.dtype), xbc_raw], axis=1)
+    xbc = _causal_conv_carry(xbc_raw, params["conv_w"], params["conv_b"],
+                             cache.conv.astype(xbc_raw.dtype))
+    xin, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    b, l, _ = x.shape
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    xh = xin.reshape(b, l, heads, cfg.ssm_headdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.where(jnp.arange(l)[None, :, None] < n_valid, dt, 0.0)
+    a = jnp.exp(params["A_log"])
+    y, final_state = ssd_scan(xh.astype(jnp.float32), dt, a,
+                              bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+                              cfg.ssm_chunk, initial_state=cache.state)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], eps=cfg.norm_eps)
+    out = _proj(y, params["out_proj"], cfg)
+    # Raw rows ending at the last valid position: ext[:, n_valid : n_valid
+    # + width-1] — absolute positions [off + n_valid - (width-1), off +
+    # n_valid), zeros from the initial carry when the stream is shorter.
+    conv = jax.lax.dynamic_slice_in_dim(ext, n_valid, cfg.ssm_conv - 1, axis=1)
+    return out, MambaCache(conv=conv.astype(x.dtype),
+                           state=final_state.astype(jnp.float32))
 
 
 def mamba_decode_step(params: dict, x: jax.Array, cache: MambaCache,

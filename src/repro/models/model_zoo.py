@@ -62,6 +62,15 @@ class BoundModel:
         return self._mod.prefill_step(params, self.cfg, batch,
                                       extra_slots=extra_slots)
 
+    def prefill_chunk_step(self, params, cache, batch):
+        """Chunked prefill (DESIGN.md §10): advance a B=1 staging cache by
+        one prompt chunk. ``batch`` carries ``tokens: (1, T)`` (zero-padded
+        past the prompt on the final chunk) and ``n_valid: (1,)``; returns
+        the last valid row's logits ``(1, 1, V)`` and the advanced cache.
+        Bit-identical to a one-shot :meth:`prefill_step` of the same prompt
+        after ``cache_ops.truncate_seq`` trims the bucket padding."""
+        return self._mod.prefill_chunk_step(params, self.cfg, cache, batch)
+
     # --- slot contract (models/cache_ops.py, DESIGN.md §7): every family's
     # cache keeps the batch/slot dim at axis 1 and a per-sequence (B,) pos
     # vector, so one serving engine can admit/evict sequences independently.

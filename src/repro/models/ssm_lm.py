@@ -10,7 +10,7 @@ from repro.configs.base import ModelConfig
 from .layers import rms_norm
 from repro.parallel.context import shard_activations
 from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
-                     mamba_block, mamba_decode_step)
+                     mamba_block, mamba_chunk_step, mamba_decode_step)
 
 __all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache",
            "decode_step", "paged_decode_step"]
@@ -95,6 +95,35 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
     b, s = batch["tokens"].shape[:2]
     return logits, SSMCacheState(mamba=MambaCache(*caches),
                                  pos=jnp.full((b,), s, jnp.int32))
+
+
+def prefill_chunk_step(params: dict, cfg: ModelConfig, cache: "SSMCacheState",
+                       batch: dict) -> tuple[jax.Array, "SSMCacheState"]:
+    """Advance a B=1 staging cache by one prompt chunk (DESIGN.md §10).
+
+    ``batch["tokens"]: (1, T)`` with ``T % cfg.ssm_chunk == 0`` so the SSD
+    inter-chunk recurrence splits across calls at the same boundaries a
+    one-shot :func:`prefill_step` would use; ``batch["n_valid"]: (1,)``
+    marks the real tokens of a padded final chunk. Returns the last valid
+    row's logits ``(1, 1, V)`` and the advanced cache.
+    """
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    n_valid = jnp.reshape(jnp.asarray(batch["n_valid"], jnp.int32), (-1,))[0]
+
+    def body(x, inputs):
+        layer, mc = inputs
+        x = shard_activations(x)
+        y, mc2 = mamba_chunk_step(layer["mixer"],
+                                  rms_norm(x, layer["ln"], eps=cfg.norm_eps),
+                                  MambaCache(*mc), cfg, n_valid)
+        return x + y, mc2
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache.mamba))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = (last @ params["embed"].T).astype(jnp.float32)
+    return logits, SSMCacheState(mamba=MambaCache(*new_caches),
+                                 pos=cache.pos + n_valid)
 
 
 class SSMCacheState(NamedTuple):

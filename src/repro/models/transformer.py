@@ -181,21 +181,50 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                                      kernel_impl=cfg.paged_attn_kernel)
         new_cache = new_paged
     elif cache is not None and cache != "collect":
-        # decode: write this token's K/V at each sequence's own position.
-        # ``cache_pos: (B,)`` — per-sequence absolute positions, so sequences
-        # admitted at different times (serving slot pool, DESIGN.md §7) share
-        # one batched step. The cache rows may be a paged-gather view
-        # (DESIGN.md §8) whose sequence extent is a page-count multiple, not
-        # max_seq; mode="drop" makes the free-slot behaviour explicit — an
-        # idle serving slot's position can drift past the view and its
-        # write must vanish rather than clamp onto a live row's tail.
         k_cache, v_cache = cache
         cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
-        batch_idx = jnp.arange(b)
-        k_cache = k_cache.at[batch_idx, cache_pos].set(k[:, 0], mode="drop")
-        v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0], mode="drop")
-        out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
-                               window=window, logit_softcap=cfg.attn_softcap)
+        if s > 1:
+            # chunked prefill: scatter a whole chunk's K/V at the shared
+            # per-batch offset (the staging cache is B=1; all rows sit at the
+            # same position) and flash-attend with *absolute* positions —
+            # q rows at [off, off+s), kv columns over the cache's full
+            # bucket extent. Columns past the filled prefix are causally
+            # masked (their positions exceed every valid q row), so the
+            # bucket padding and any garbage pad-row writes are exact
+            # no-ops for the valid rows; explicit positions force the jnp
+            # flash path, the same one a short one-shot prefill takes.
+            off = cache_pos[0]
+            start = (jnp.zeros((), jnp.int32), off) + \
+                (jnp.zeros((), jnp.int32),) * 2
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), start)
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), start)
+            e = k_cache.shape[1]
+            kv_pos = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32), (b, e))
+            out = flash_attention(
+                q, k_cache, v_cache, q_positions=positions,
+                kv_positions=kv_pos, causal=True, window=window,
+                logit_softcap=cfg.attn_softcap, q_block=min(cfg.q_block, s),
+                kv_block=min(cfg.kv_block, e), skip_masked_blocks=False,
+                bf16_probs=cfg.bf16_probs, kernel_impl=cfg.attn_kernel,
+                canonical_positions=False)
+        else:
+            # decode: write this token's K/V at each sequence's own position.
+            # ``cache_pos: (B,)`` — per-sequence absolute positions, so
+            # sequences admitted at different times (serving slot pool,
+            # DESIGN.md §7) share one batched step. The cache rows may be a
+            # paged-gather view (DESIGN.md §8) whose sequence extent is a
+            # page-count multiple, not max_seq; mode="drop" makes the
+            # free-slot behaviour explicit — an idle serving slot's position
+            # can drift past the view and its write must vanish rather than
+            # clamp onto a live row's tail.
+            batch_idx = jnp.arange(b)
+            k_cache = k_cache.at[batch_idx, cache_pos].set(k[:, 0], mode="drop")
+            v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0], mode="drop")
+            out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
+                                   window=window,
+                                   logit_softcap=cfg.attn_softcap)
         new_cache = (k_cache, v_cache)
     else:
         if cfg.attn_kv_gather:
@@ -380,6 +409,54 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
         vs = tuple(pad(v) for v in vs)
     cache = KVCache(k=ks, v=vs, pos=jnp.full((b,), s, jnp.int32))
     return logits, cache
+
+
+def prefill_chunk_step(params: dict, cfg: ModelConfig, cache: "KVCache",
+                       batch: dict) -> tuple[jax.Array, "KVCache"]:
+    """Commit one prompt chunk into a B=1 staging cache at the cache's
+    current position (chunked prefill, DESIGN.md §10).
+
+    ``batch["tokens"]: (1, T)`` is the chunk, zero-padded past
+    ``batch["n_valid"]: (1,)`` real tokens (only the final chunk of a prompt
+    is ever padded, so full chunks always land contiguously). Returns the
+    logits of the last *valid* row — ``(1, 1, V)``, the same row a one-shot
+    prefill of the prompt would project — and the cache advanced by
+    ``n_valid``. Pad rows write garbage K/V past the prompt, which
+    ``cache_ops.truncate_seq`` slices away before pool admission.
+    """
+    x = _embed_tokens(params, cfg, batch)
+    b, t, _ = x.shape
+    n_valid = jnp.reshape(jnp.asarray(batch["n_valid"], jnp.int32), (-1,))[0]
+    pos = jnp.broadcast_to(cache.pos, (b,))
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.mrope_sections is not None and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None],
+                                           (3, b, t)).astype(jnp.int32)
+
+    gsz = cfg.group_size
+
+    def group_body(x, inputs):
+        x = shard_activations(x)
+        group_params = inputs["params"]
+        new_k, new_v = [], []
+        for p in range(gsz):
+            x, kvc, _ = _layer_forward(
+                group_params[p], x, cfg, p,
+                positions=positions, mrope_positions=mrope_positions,
+                cache=(inputs["k"][p], inputs["v"][p]), cache_pos=pos,
+                canonical_positions=False)
+            new_k.append(kvc[0])
+            new_v.append(kvc[1])
+        return x, (tuple(new_k), tuple(new_v))
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x,
+        {"params": params["layers"], "k": cache.k, "v": cache.v})
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = logits_from_hidden(params, cfg, last)
+    return logits, KVCache(k=ks, v=vs, pos=pos + n_valid)
 
 
 # ------------------------------------------------------------------ decode

@@ -18,7 +18,7 @@ from repro.configs.base import ModelConfig
 from .layers import PagedKV, rms_norm
 from repro.parallel.context import shard_activations
 from .mamba2 import (MambaCache, init_mamba_cache, init_mamba_params,
-                     mamba_block, mamba_decode_step)
+                     mamba_block, mamba_chunk_step, mamba_decode_step)
 from .transformer import _attn_forward, _init_attn, _init_mlp, _mlp_forward
 
 __all__ = ["init_params", "forward_hidden", "loss_fn", "init_cache",
@@ -169,6 +169,58 @@ def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
     cache = HybridCache(mamba=MambaCache(*mcaches), k=ks, v=vs,
                         pos=jnp.full((b,), s, jnp.int32))
     return logits, cache
+
+
+def prefill_chunk_step(params: dict, cfg: ModelConfig, cache: "HybridCache",
+                       batch: dict) -> tuple[jax.Array, "HybridCache"]:
+    """Advance a B=1 staging cache by one prompt chunk (DESIGN.md §10):
+    mamba layers continue their SSD recurrence via
+    :func:`~repro.models.mamba2.mamba_chunk_step`, each shared-attn site
+    scatters the chunk's K/V at the cache's current offset and flash-attends
+    with absolute positions (the ``transformer._attn_forward`` chunk
+    branch). ``batch`` carries ``tokens: (1, T)`` (``T % cfg.ssm_chunk ==
+    0``) and ``n_valid: (1,)``; returns the last valid row's logits and the
+    cache advanced by ``n_valid``."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    b, t, _ = x.shape
+    n_valid = jnp.reshape(jnp.asarray(batch["n_valid"], jnp.int32), (-1,))[0]
+    pos = jnp.broadcast_to(cache.pos, (b,))
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+
+    grouped_params = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), params["layers"])
+    grouped_mamba = jax.tree.map(
+        lambda a: a.reshape(n_groups, every, *a.shape[1:]), cache.mamba)
+
+    def group_body(x, inputs):
+        group, mcaches, kc, vc = inputs
+        x = shard_activations(x)
+        new_m = []
+        for i in range(every):
+            layer = jax.tree.map(lambda a: a[i], group)
+            mc = jax.tree.map(lambda a: a[i], mcaches)
+            y, mc2 = mamba_chunk_step(layer["mixer"],
+                                      rms_norm(x, layer["ln"], eps=cfg.norm_eps),
+                                      MambaCache(*mc), cfg, n_valid)
+            x = x + y
+            new_m.append(mc2)
+        x, kvc = _shared_block(params["shared"], x, cfg,
+                               positions=positions, cache=(kc, vc),
+                               cache_pos=pos)
+        stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m)
+        return x, (stacked_m, kvc[0], kvc[1])
+
+    x, (new_mamba, ks, vs) = jax.lax.scan(
+        group_body, x, (grouped_params, grouped_mamba, cache.k, cache.v))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)
+    logits = _head(last, params["lm_head"], cfg)
+    new_mamba = jax.tree.map(
+        lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mamba)
+    return logits, HybridCache(mamba=MambaCache(*new_mamba), k=ks, v=vs,
+                               pos=pos + n_valid)
 
 
 class HybridCache(NamedTuple):

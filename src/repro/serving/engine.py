@@ -1,54 +1,62 @@
-"""Continuous-batching serving engine (DESIGN.md §7–§8).
+"""Continuous-batching serving engine (DESIGN.md §7–§10).
 
-The loop: **admit → grow → decode → evict**, repeated until queue and pool
-drain.
+The engine is a **step scheduler**: one public :meth:`Engine.step` advances
+the whole pool by one scheduling quantum — a bounded budget of
+prefill-chunk work, completed-prefill admission, then one batched decode
+over every live slot — and :meth:`Engine.run` / :meth:`Engine.stream` are
+just loops over it.
 
-* *Admit (prefill-on-admit)*: while a slot (and, in paged mode, enough pages
-  for the prompt) is free and a request waits, run a B=1 prefill through the
-  mesh-sharded ``launch.steps.cached_prefill_step`` (one compiled executable
-  per prompt length, reused across requests), sample the first token from
-  its logits, and insert the prefilled cache into the slot pool. Paged
-  admission reserves pages *lazily* — just the prompt's worth.
-* *Grow (paged only)*: before each decode step, every live slot's next write
-  position must map to an allocated page (``PagedSlotPool.ensure_page``).
-  When the page pool is exhausted the engine applies **backpressure**: the
-  youngest live slot is preempted — evicted with its pages returned and its
-  request re-queued at the front — rather than crashing. Greedy/per-request
-  PRNG sampling makes a restarted request regenerate the identical stream.
+* *Chunked prefill (default)*: a prompt is prefilled ``chunk`` tokens at a
+  time into a B=1 *staging* cache of its prompt-bucket extent
+  (``launch.steps.prompt_buckets`` — pow2-style chunk multiples, so the
+  compiled-executable count is bounded by the bucket set, not the prompt
+  distribution). Each engine step spends at most ``prefill_budget`` tokens
+  (default: one chunk) on the staging prompt before decoding, so admission
+  never stalls batched decode for more than one chunk — the one-shot
+  prefill stall this replaces is the whole-prompt forward between two
+  decode steps. On the final chunk the staging cache is truncated to the
+  exact prompt extent (``cache_ops.truncate_seq``) and admitted through
+  the same ``slot_insert`` / ``paged_insert`` path a one-shot prefill
+  uses, so pool page accounting and every PR 4 paging invariant are
+  untouched. ``prefill_mode="oneshot"`` keeps the whole-prompt
+  ``cached_prefill_step`` admission as the scheduling A/B.
+* *Grow (paged only)*: before each decode step, every live slot's next
+  write position must map to an allocated page. Exhaustion preempts
+  youngest-first — including an in-flight staging prefill, whose request
+  is re-queued with its partial progress discarded (determinism makes the
+  restarted stream bit-identical).
 * *Decode (batched)*: one ``cached_paged_decode_step`` (or
-  ``cached_decode_step`` for the contiguous pool) call advances *all* live
-  slots a token. Slots sit at different absolute positions — the per-slot
-  ``pos`` vector in every family cache makes that well-defined — and the
-  decode-shaped (M = capacity, S = 1) SC-GEMMs resolve to the skinny
-  autotune bucket (``kernels.autotune.bucket_m``) instead of prefill tiles.
-* *Evict*: a request leaves on EOS or length; its slot (and pages) are
-  zeroed and free for the next admission *on the same step* — no request
-  ever waits for a stranger's tail.
+  ``cached_decode_step``) call advances all live slots a token; sampled
+  tokens are *streamed* — pushed through per-request ``on_token``
+  callbacks the moment they exist, or pulled through the
+  :meth:`Engine.stream` generator, which drives ``step()`` on demand.
+* *Evict*: a request leaves on EOS or length; its slot (and pages) free on
+  the same step.
 
-Determinism invariant: with SC-GEMM enabled, the engine's per-request token
-streams are **bit-identical** to the sequential per-request
-``launch.serve.generate`` baseline, for every family, in both cache
-layouts. Three properties compose into that guarantee: deterministic SC
-streams are count-exact (PAPER.md — no LFSR state to perturb), ``sc_dense``
-quantizes activations per-row (a token's counts never depend on batch
-neighbours), and per-slot positions reproduce exactly the sequential cache
-layout — paged gathers only append position-masked garbage past each row's
-``pos``, which the decode attention mask excludes exactly. Static batching
-(``continuous=False``) keeps the same math and admits in gangs — the A/B
-baseline for scheduling, not numerics.
+Determinism invariant: with SC-GEMM enabled, the engine's per-request
+token streams are **bit-identical** to the sequential per-request
+``launch.serve.generate`` baseline — for every family, both cache layouts,
+and both prefill modes. Chunked prefill preserves it because every chunk
+boundary is a multiple of ``cfg.ssm_chunk`` (the SSD recurrence splits
+exactly), attention K/V rows are per-row computations scattered at
+absolute positions, and the bucket's padding columns are causally masked
+into exact no-ops — the invariant tests/test_serving.py sweeps and
+tests/test_paging.py fuzzes.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Sequence
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.launch.steps import (cached_decode_step, cached_paged_decode_step,
-                                cached_prefill_step)
+from repro.launch.steps import (bucket_for, cached_chunked_prefill_step,
+                                cached_decode_step, cached_paged_decode_step,
+                                cached_prefill_step, prompt_buckets)
 from repro.models import bind, cache_ops
 
 from .queue import Request, RequestQueue, RequestResult
@@ -56,12 +64,36 @@ from .slots import PagedSlotPool, PoolExhausted, SlotEntry, SlotPool
 
 __all__ = ["Engine", "default_serving_mesh"]
 
+#: ``on_token(uid, index, token, finished_reason)`` — ``index`` is the
+#: 0-based position in the generated stream; ``finished_reason`` is None
+#: until the final token ("eos" / "length"). A preempted-and-readmitted
+#: request *replays* its stream from index 0 (bit-identically); pull-side
+#: consumers (``Engine.stream``) dedupe by index.
+TokenCallback = Callable[[str, int, np.ndarray, "str | None"], None]
+
 
 def default_serving_mesh() -> Mesh:
     """1x1 ("data", "model") mesh: the engine always runs through the
     sharded step builders; a single-device mesh makes every constraint a
     no-op without a separate unsharded code path."""
     return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+@dataclass
+class _StagingPrefill:
+    """One in-flight chunked prefill: the queue head being committed,
+    chunk by chunk, into a B=1 staging cache of ``bucket`` extent. The
+    entry's ``prefill_offset`` tracks progress; ``rows`` holds the final
+    chunk's logit row once complete (the first sampled token's source)."""
+    entry: SlotEntry
+    bucket: int
+    step: Any                    # the cached (bucket, chunk) jitted step
+    cache: Any                   # B=1 staging cache, threaded through chunks
+    rows: np.ndarray | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.entry.prefill_offset >= self.entry.request.prompt_len
 
 
 class Engine:
@@ -78,19 +110,35 @@ class Engine:
     admitted only into an *empty* pool and the next gang waits until every
     member finished — the every-request-waits-for-the-slowest behaviour
     continuous batching removes.
+
+    ``prefill_mode`` selects chunked (default) or one-shot admission;
+    ``chunk`` is the prefill chunk length (rounded up to a
+    ``cfg.ssm_chunk`` multiple for the ssm/hybrid families so SSD chunk
+    boundaries align); ``prefill_budget`` caps prefill tokens per engine
+    step (default: one chunk).
     """
 
     def __init__(self, cfg, params, *, capacity: int = 4, max_seq: int = 256,
                  mesh: Mesh | None = None, continuous: bool = True,
                  paged: bool = True, block: int = 64,
-                 n_blocks: int | None = None, fused: bool = True):
+                 n_blocks: int | None = None, fused: bool = True,
+                 prefill_mode: str = "chunked", chunk: int = 16,
+                 prefill_budget: int | None = None):
         cfg.validate()
+        if prefill_mode not in ("chunked", "oneshot"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
         self.continuous = continuous
         self.paged = paged
         self.fused = fused and paged
+        self.prefill_mode = prefill_mode
+        if cfg.family in ("ssm", "hybrid"):
+            chunk = -(-chunk // cfg.ssm_chunk) * cfg.ssm_chunk
+        self.chunk = chunk
+        self.prefill_budget = chunk if prefill_budget is None else prefill_budget
+        self.buckets = prompt_buckets(max_seq, chunk)
         self.mesh = mesh if mesh is not None else default_serving_mesh()
         self._m = bind(cfg)
 
@@ -128,19 +176,33 @@ class Engine:
         self.stats: dict[str, Any] = {}
         self._step = 0          # decode-step counter (admissions are free)
         self._n_prefills = 0
+        self._n_prefill_chunks = 0
         self._n_preemptions = 0
         self._admit_counter = 0
+        self._staging: _StagingPrefill | None = None
+        self._results: dict[str, RequestResult] = {}
+        self._callbacks: dict[str, TokenCallback] = {}
+        self._first_token_at: dict[str, float] = {}
+        self._prefill_shapes: set[tuple[int, int]] = set()
+        self._last_decode_end: float | None = None
+        self._max_decode_gap = 0.0
 
     # ------------------------------------------------------------ plumbing
 
+    @property
+    def has_work(self) -> bool:
+        """Anything queued, staging, or live in a slot."""
+        return (bool(self.queue) or bool(self.pool.entries)
+                or self._staging is not None)
+
     def _prefill_request(self, req: Request):
-        """B=1 prefill through the cached sharded step for this prompt
-        length; returns (last-token logit rows, single cache)."""
+        """One-shot B=1 prefill through the cached sharded step for this
+        prompt length; returns (last-token logit rows, single cache)."""
         prefill, shardings, _ = cached_prefill_step(
             self.cfg, self.mesh, batch_size=1, seq_len=req.prompt_len)
+        self._prefill_shapes.add((req.prompt_len, 0))
         batch = {"tokens": jnp.asarray(req.prompt)[None]}
         logits, cache = prefill(self._params, batch)
-        self._n_prefills += 1
         return np.asarray(jax.device_get(logits))[0, -1], cache
 
     def _sample(self, entry: SlotEntry, row: np.ndarray) -> np.ndarray:
@@ -171,17 +233,22 @@ class Engine:
             return "length"
         return None
 
-    def _emit(self, slot: int, entry: SlotEntry, tok: np.ndarray,
-              results: dict) -> None:
-        """Record a sampled token; finish + evict or park it for the next
-        decode step."""
+    def _emit(self, slot: int, entry: SlotEntry, tok: np.ndarray) -> None:
+        """Record a sampled token, push it to the request's stream, and
+        finish + evict or park it for the next decode step."""
         entry.generated.append(tok)
+        uid = entry.request.uid
+        self._first_token_at.setdefault(uid, time.perf_counter())
         reason = self._finish_reason(entry, tok)
+        cb = self._callbacks.get(uid)
+        if cb is not None:
+            cb(uid, entry.n_generated - 1, tok, reason)
         if reason is not None:
             self.pool.evict(slot)
+            self._callbacks.pop(uid, None)
             req = entry.request
-            results[req.uid] = RequestResult(
-                uid=req.uid,
+            self._results[uid] = RequestResult(
+                uid=uid,
                 tokens=np.stack(entry.generated).astype(np.int32),
                 prompt_len=req.prompt_len,
                 finished_reason=reason,
@@ -190,9 +257,94 @@ class Engine:
                 finished_at=time.perf_counter(),
                 admit_step=entry.admit_step,
                 finish_step=self._step,
+                first_token_at=self._first_token_at.pop(uid),
             )
         else:
             self._tok_buf[slot] = tok
+
+    # ----------------------------------------------------- chunked prefill
+
+    def _start_prefill(self, req: Request) -> _StagingPrefill:
+        """Pop the queue head into a fresh staging prefill: pick its bucket,
+        build (or reuse) the (bucket, chunk) executable, and zero-init the
+        staging cache. The entry is created *now* — its ``admit_index``
+        makes the staging prefill the youngest admission for preemption
+        ordering, and ``prefill_offset`` tracks chunk progress."""
+        self.pool.check_fits(req)
+        bucket = bucket_for(req.prompt_len, self.buckets)
+        step, shardings, _ = cached_chunked_prefill_step(
+            self.cfg, self.mesh, seq_len=bucket, chunk=self.chunk)
+        self._prefill_shapes.add((bucket, self.chunk))
+        cache = jax.device_put(self._m.init_cache(1, bucket),
+                               shardings["cache"])
+        entry = SlotEntry(request=req, admitted_at=0.0, admit_step=self._step,
+                          admit_index=self._admit_counter)
+        self._admit_counter += 1
+        return _StagingPrefill(entry=entry, bucket=bucket, step=step,
+                               cache=cache)
+
+    def _prefill_chunk_once(self, st: _StagingPrefill) -> None:
+        """Commit one chunk of the staging prompt (the final chunk is
+        zero-padded past ``n_valid`` real tokens)."""
+        req = st.entry.request
+        off = st.entry.prefill_offset
+        nv = min(self.chunk, req.prompt_len - off)
+        toks = np.zeros((self.chunk,) + req.prompt.shape[1:], np.int32)
+        toks[:nv] = req.prompt[off:off + nv]
+        batch = {"tokens": jnp.asarray(toks)[None],
+                 "n_valid": jnp.asarray([nv], jnp.int32)}
+        logits, st.cache = st.step(self._params, st.cache, batch)
+        st.entry.prefill_offset = off + nv
+        self._n_prefill_chunks += 1
+        if st.done:
+            st.rows = np.asarray(jax.device_get(logits))[0, -1]
+
+    def _can_admit_staged(self, st: _StagingPrefill) -> bool:
+        if not self.pool.has_free:
+            return False
+        return not self.paged or self.pool.can_admit(st.entry.request)
+
+    def _admit_staged(self) -> None:
+        """Completed staging prefill → pool admission: truncate the bucket
+        padding to the exact prompt extent and insert through the same
+        ``slot_insert``/``paged_insert`` path a one-shot prefill takes (so
+        page accounting sees the prompt, never the bucket), then sample and
+        emit the first token from the held final-chunk logits."""
+        st = self._staging
+        self._staging = None
+        req = st.entry.request
+        single = cache_ops.truncate_seq(st.cache, req.prompt_len)
+        st.entry.admitted_at = time.perf_counter()
+        st.entry.admit_step = self._step
+        slot = self.pool.admit(st.entry, single)
+        self._n_prefills += 1
+        self._emit(slot, st.entry, self._sample(st.entry, st.rows))
+
+    def _advance_prefill(self, budget_tokens: int) -> None:
+        """Spend up to ``budget_tokens`` of prefill-chunk work: advance the
+        in-flight staging prompt (starting the queue head if idle) and
+        admit it the moment it completes and a slot + pages are free. A
+        completed-but-unadmittable prompt is *held* in staging — the live
+        slots keep decoding and free pages as they finish."""
+        chunks_left = max(1, budget_tokens // self.chunk)
+        while True:
+            if self._staging is None:
+                if not self.queue:
+                    return
+                self._staging = self._start_prefill(self.queue.pop())
+            st = self._staging
+            while not st.done and chunks_left > 0:
+                self._prefill_chunk_once(st)
+                chunks_left -= 1
+            if not st.done:
+                return                       # budget exhausted mid-prompt
+            if not self._can_admit_staged(st):
+                return                       # hold until slots/pages free
+            self._admit_staged()
+            if chunks_left <= 0:
+                return
+
+    # --------------------------------------------------- one-shot admission
 
     def _may_admit_next(self) -> bool:
         """Paged backpressure at admission: hold the queue head back until
@@ -202,24 +354,37 @@ class Engine:
             return True
         return self.pool.can_admit(self.queue.peek())
 
-    def _admit_one(self, req: Request, results: dict) -> None:
+    def _admit_one(self, req: Request) -> None:
         rows, single_cache = self._prefill_request(req)
         entry = SlotEntry(request=req, admitted_at=time.perf_counter(),
                           admit_step=self._step,
-                          admit_index=self._admit_counter)
+                          admit_index=self._admit_counter,
+                          prefill_offset=req.prompt_len)
         self._admit_counter += 1
+        self._n_prefills += 1
         slot = self.pool.admit(entry, single_cache)
-        self._emit(slot, entry, self._sample(entry, rows), results)
+        self._emit(slot, entry, self._sample(entry, rows))
+
+    # ----------------------------------------------------------- the pool
 
     def _preempt_youngest(self) -> None:
-        """Evict the most recently admitted slot and re-queue its request
+        """Evict the most recently admitted slot — or drop the in-flight
+        staging prefill if it is younger — and re-queue its request
         (progress is discarded; determinism makes the regenerated stream
         identical). Youngest-first keeps FCFS intact: the oldest live
         request always advances, so the loop always makes progress."""
-        victim = max(self.pool.entries,
-                     key=lambda s: self.pool.entries[s].admit_index)
-        entry = self.pool.evict(victim)
-        self.queue.requeue(entry.request)
+        cands: list[tuple[int, int | None]] = [
+            (e.admit_index, s) for s, e in self.pool.entries.items()]
+        if self._staging is not None:
+            cands.append((self._staging.entry.admit_index, None))
+        _, victim = max(cands, key=lambda t: t[0])
+        if victim is None:
+            req = self._staging.entry.request
+            self._staging = None
+            self.queue.requeue(req)
+        else:
+            entry = self.pool.evict(victim)
+            self.queue.requeue(entry.request)
         self._n_preemptions += 1
 
     def _grow_pages(self) -> None:
@@ -234,7 +399,7 @@ class Engine:
                     self.pool.ensure_page(slot, entry.next_write_pos)
                     break
                 except PoolExhausted:
-                    if len(self.pool.entries) <= 1:
+                    if len(self.pool.entries) <= 1 and self._staging is None:
                         raise   # run() pre-check makes this unreachable
                     self._preempt_youngest()
 
@@ -251,7 +416,104 @@ class Engine:
             logits, self.pool.cache = self._decode(
                 self._params, self.pool.cache, batch)
         self._step += 1
-        return np.asarray(jax.device_get(logits))[:, -1]
+        rows = np.asarray(jax.device_get(logits))[:, -1]
+        now = time.perf_counter()
+        if self._last_decode_end is not None:
+            self._max_decode_gap = max(self._max_decode_gap,
+                                       now - self._last_decode_end)
+        self._last_decode_end = now
+        return rows
+
+    # ------------------------------------------------------ the scheduler
+
+    def step(self) -> bool:
+        """One scheduler step: ≤ ``prefill_budget`` tokens of prefill-chunk
+        work (admitting completed prompts), then one batched decode over
+        the live slots, emitting every sampled token through the streaming
+        surface. Returns whether work remains."""
+        if not self.has_work:
+            return False
+        if self.prefill_mode == "chunked":
+            if self.continuous:
+                self._advance_prefill(self.prefill_budget)
+            elif not self.pool.entries:
+                # static gang admission: fill the empty pool back-to-back
+                # (the admission stall is the A/B point of static mode)
+                self._advance_prefill(self.max_seq * self.capacity)
+        else:
+            may_admit = self.continuous or not self.pool.entries
+            while may_admit and self.pool.has_free and self.queue \
+                    and self._may_admit_next():
+                self._admit_one(self.queue.pop())
+                if not self.continuous and not self.pool.has_free:
+                    break
+        if not self.pool.entries:
+            # an empty pool has every slot and page free, so anything still
+            # refused now can never be admitted (it bypassed the run()
+            # pre-check via queue.submit) — fail, don't spin
+            st = self._staging
+            if st is not None and st.done and not self._can_admit_staged(st):
+                raise PoolExhausted(
+                    f"request {st.entry.request.uid!r} cannot be admitted "
+                    f"even into an empty pool "
+                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})")
+            if (self.prefill_mode == "oneshot" and self.queue
+                    and not self._may_admit_next()):
+                raise PoolExhausted(
+                    f"request {self.queue.peek().uid!r} cannot be admitted "
+                    f"even into an empty pool "
+                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})")
+            return self.has_work    # mid-prefill, or gang finished at admit
+        rows = self._decode_once()
+        for slot in self.pool.active_slots:
+            entry = self.pool.entries[slot]
+            self._emit(slot, entry, self._sample(entry, rows[slot]))
+        return self.has_work
+
+    # ------------------------------------------------- streaming surface
+
+    def submit(self, request: Request,
+               on_token: TokenCallback | None = None) -> None:
+        """Queue a request; optional ``on_token`` receives every emitted
+        token (including post-preemption replays) as decode steps land.
+        Unfittable requests are refused here, before any device work."""
+        self.pool.check_fits(request)
+        self.queue.submit(request)
+        if on_token is not None:
+            self._callbacks[request.uid] = on_token
+
+    def stream(self, request: Request) -> Iterator[np.ndarray]:
+        """Submit ``request`` and yield its tokens as they are generated,
+        driving the engine (pull-based): each ``next()`` runs scheduler
+        steps until the next token lands. Co-batched requests keep
+        advancing — their results collect for a later ``run()`` — and a
+        preempted-and-readmitted stream replays bit-identically (replayed
+        indexes are deduped, so consumers see each token exactly once)."""
+        buf: list[tuple[int, np.ndarray]] = []
+        done: list[str] = []
+
+        def on_token(uid, index, tok, reason):
+            buf.append((index, tok))
+            if reason is not None:
+                done.append(reason)
+
+        self.submit(request, on_token=on_token)
+        nxt = 0
+        while True:
+            while buf:
+                index, tok = buf.pop(0)
+                if index == nxt:        # index < nxt: preemption replay
+                    nxt += 1
+                    yield tok
+            if done:
+                # the generator IS this request's result surface — drop the
+                # collected RequestResult so a later run() doesn't resurface it
+                self._results.pop(request.uid, None)
+                return
+            self.step()
+            if not self.has_work and not buf and not done:
+                raise RuntimeError(
+                    f"engine drained without finishing {request.uid!r}")
 
     # ----------------------------------------------------------- the loop
 
@@ -268,52 +530,54 @@ class Engine:
         order = [r.uid for r in requests]
         for r in requests:
             self.queue.submit(r)
-        results: dict[str, RequestResult] = {}
         t0 = time.perf_counter()
         steps0, prefills0 = self._step, self._n_prefills
-        preempt0 = self._n_preemptions
+        chunks0, preempt0 = self._n_prefill_chunks, self._n_preemptions
+        self._last_decode_end = None
+        self._max_decode_gap = 0.0
 
-        while self.queue or self.pool.entries:
-            may_admit = self.continuous or not self.pool.entries
-            while may_admit and self.pool.has_free and self.queue \
-                    and self._may_admit_next():
-                self._admit_one(self.queue.pop(), results)
-                if not self.continuous and not self.pool.has_free:
-                    break
-            if not self.pool.entries:
-                if self.queue and not self._may_admit_next():
-                    # an empty pool has every page free, so a head request
-                    # still refused can never be admitted (it bypassed the
-                    # run() pre-check via queue.submit) — fail, don't spin
-                    raise PoolExhausted(
-                        f"request {self.queue.peek().uid!r} cannot be "
-                        f"admitted even into an empty pool "
-                        f"(n_blocks={self.pool.n_blocks})")
-                continue        # gang finished at admission (max_new == 1)
-            rows = self._decode_once()
-            for slot in self.pool.active_slots:
-                entry = self.pool.entries[slot]
-                self._emit(slot, entry, self._sample(entry, rows[slot]),
-                           results)
+        while self.step():
+            pass
 
         wall = time.perf_counter() - t0
-        out = [results[uid] for uid in order] if order else \
-            sorted(results.values(), key=lambda r: r.admitted_at)
+        if order:
+            out = [self._results.pop(uid) for uid in order]
+        else:
+            out = sorted(self._results.values(), key=lambda r: r.admitted_at)
+            self._results.clear()
         generated = sum(r.n_generated for r in out)
-        lat = sorted(r.latency_s for r in out) or [0.0]
+
+        def pctl(values, q):
+            v = sorted(values) or [0.0]
+            if q == 0.5:
+                return v[len(v) // 2]
+            return v[min(len(v) - 1, int(np.ceil(q * len(v))) - 1)]
+
+        lats = [r.latency_s for r in out]
+        ttfts = [r.ttft_s for r in out]
+        itls = [r.itl_s for r in out if r.n_generated > 1]
         self.stats = {
             "mode": "continuous" if self.continuous else "static",
             "layout": "paged" if self.paged else "contiguous",
+            "prefill_mode": self.prefill_mode,
             "requests": len(out),
             "generated_tokens": generated,
             "decode_steps": self._step - steps0,
             "prefills": self._n_prefills - prefills0,
+            "prefill_chunks": self._n_prefill_chunks - chunks0,
             "preemptions": self._n_preemptions - preempt0,
             "wall_s": wall,
             "tok_per_s": generated / wall if wall > 0 else float("inf"),
-            "p50_latency_s": lat[len(lat) // 2],
-            "p99_latency_s": lat[min(len(lat) - 1,
-                                     int(np.ceil(0.99 * len(lat))) - 1)],
+            "p50_latency_s": pctl(lats, 0.5),
+            "p99_latency_s": pctl(lats, 0.99),
+            "ttft_p50_s": pctl(ttfts, 0.5),
+            "ttft_p99_s": pctl(ttfts, 0.99),
+            "itl_p50_s": pctl(itls, 0.5),
+            "itl_p99_s": pctl(itls, 0.99),
+            "max_decode_gap_s": self._max_decode_gap,
+            "chunk": self.chunk,
+            "buckets": self.buckets,
+            "prefill_executables": len(self._prefill_shapes),
         }
         if self.paged:
             self.stats.update({

@@ -63,6 +63,14 @@ class RequestResult:
     finished_at: float
     admit_step: int               # engine decode-step index at admission
     finish_step: int              # engine decode-step index at completion
+    first_token_at: float = 0.0   # wall clock of the first emitted token
+
+    def __post_init__(self):
+        if not self.first_token_at:
+            # admission samples the first token from the prefill logits, so
+            # the two instants coincide unless the engine recorded an
+            # earlier emission (preempted streams keep their original TTFT).
+            self.first_token_at = self.admitted_at
 
     @property
     def n_generated(self) -> int:
@@ -75,9 +83,16 @@ class RequestResult:
 
     @property
     def ttft_s(self) -> float:
-        """Time to first token: admission runs the prefill, whose logits
-        yield the first sampled token."""
-        return self.admitted_at - self.enqueued_at
+        """Time to first token: queue entry to the first emitted token (the
+        prefill's last chunk yields the first sampled token)."""
+        return self.first_token_at - self.enqueued_at
+
+    @property
+    def itl_s(self) -> float:
+        """Mean inter-token latency over the stream after the first token
+        (0.0 for single-token streams)."""
+        return ((self.finished_at - self.first_token_at)
+                / max(self.n_generated - 1, 1))
 
 
 class RequestQueue:
@@ -99,7 +114,12 @@ class RequestQueue:
     def requeue(self, request: Request) -> None:
         """Return a preempted request to the *front* of the line (its uid is
         already known). The engine preempts youngest-first, so iterated
-        requeues restore the original FCFS admission order."""
+        requeues restore the original FCFS admission order. Partially
+        prefilled requests land here too — their staging progress
+        (``SlotEntry.prefill_offset``) is discarded and the prefill restarts
+        from offset 0 on re-admission; determinism makes the replayed
+        stream bit-identical, so correctness never depends on how far the
+        abandoned prefill got."""
         self._q.appendleft(request)
 
     def pop(self) -> Request:

@@ -49,7 +49,19 @@ __all__ = ["SlotPool", "PagedSlotPool", "SlotEntry", "PoolExhausted"]
 class PoolExhausted(RuntimeError):
     """A capacity refusal: no free slot, no free page, or a request that can
     never fit the pool. Typed so the engine can distinguish backpressure
-    (preempt / re-queue / wait) from genuine errors."""
+    (preempt / re-queue / wait) from genuine errors.
+
+    Page-pressure refusals carry the shortfall as data — ``pages_needed``
+    vs ``pages_free`` at refusal time — so backpressure and preemption logs
+    are actionable without parsing the message (both are ``None`` for
+    refusals that involve no page accounting, e.g. ``max_seq`` overflow or
+    a full slot list)."""
+
+    def __init__(self, message: str, *, pages_needed: int | None = None,
+                 pages_free: int | None = None):
+        super().__init__(message)
+        self.pages_needed = pages_needed
+        self.pages_free = pages_free
 
 
 @dataclass
@@ -61,6 +73,13 @@ class SlotEntry:
     admit_index: int = 0    # monotone admission counter (preemption order)
     generated: list = field(default_factory=list)   # sampled ids, host ints
     key: Any = None                                 # per-request PRNG chain
+    #: Prompt tokens already committed to the chunked-prefill staging cache
+    #: (DESIGN.md §10). Created at prefill *start* — before pool admission —
+    #: so the step scheduler can resume a partial prefill across engine
+    #: steps and preemption can requeue the request knowing exactly what to
+    #: discard. Equals ``prompt_len`` from admission onward; one-shot
+    #: prefill sets it in a single jump.
+    prefill_offset: int = 0
 
     @property
     def n_generated(self) -> int:
@@ -272,7 +291,8 @@ class PagedSlotPool:
         if n > len(self._free_pages):
             raise PoolExhausted(
                 f"need {n} pages but only {len(self._free_pages)} of "
-                f"{self.n_blocks} are free")
+                f"{self.n_blocks} are free",
+                pages_needed=n, pages_free=len(self._free_pages))
         pages = [heapq.heappop(self._free_pages) for _ in range(n)]
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return pages
@@ -291,7 +311,9 @@ class PagedSlotPool:
             raise PoolExhausted(
                 f"request {req.uid!r} needs {self.pages_for(need)} pages "
                 f"of {self.block} tokens but the page budget is "
-                f"n_blocks={self.n_blocks}")
+                f"n_blocks={self.n_blocks}",
+                pages_needed=self.pages_for(need),
+                pages_free=len(self._free_pages))
 
     def admit(self, entry: SlotEntry, single_cache: Any) -> int:
         """Reserve the prompt's pages and insert a prefilled B=1 cache into

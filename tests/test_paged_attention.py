@@ -7,10 +7,11 @@ Three layers, cheapest first:
   ``decode_attention``) across block sizes, page budgets, fragmented /
   shuffled block tables, GQA ratios, sliding windows, dtypes, and every
   valid KV-heads-per-step — ``np.testing.assert_array_equal``, no
-  tolerance;
-* *dispatch*: the eligibility gate routes softcap and full-MHA layouts to
-  the gathered-dense fallback, and ``kernel_impl`` resolves like the flash
-  kernel's;
+  tolerance. Full-MHA (g = 1) layouts ride the whole-row finish path
+  (ISSUE 6) and get the same zero-tolerance treatment;
+* *dispatch*: the eligibility gate routes softcap and single-KV-head
+  layouts to the gathered-dense fallback, serves full-MHA through the
+  kernel, and ``kernel_impl`` resolves like the flash kernel's;
 * *the headline invariant*, through the real engine: fused streams (both
   the "auto" per-layer-gather path this CPU resolves to and the forced
   Pallas kernel) are **bit-identical** to the sequential per-request
@@ -104,6 +105,9 @@ GEOMETRIES = [
     (2, 4, 2, 32, 2, 8, 5),         # window + wider head dim
     (4, 8, 2, 16, 1, 16, None),     # single-page table (MB = 1)
     (2, 6, 2, 16, 3, 4, None),      # odd group size g = 3
+    (3, 4, 4, 16, 4, 4, None),      # full-MHA (g = 1, whole-row finish)
+    (2, 4, 4, 16, 3, 4, 6),         # full-MHA + sliding window
+    (2, 8, 8, 32, 2, 4, None),      # full-MHA, wide heads, kvh up to 8
 ]
 
 
@@ -130,6 +134,17 @@ def test_kernel_bit_identical_bf16():
                                       dtype=jnp.bfloat16)
     ref = _dense_reference(q, kp, vp, tables, pos)
     out = _kernel_out(q, kp, vp, tables, pos, kvh=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_kernel_bit_identical_bf16_full_mha():
+    """g == 1 buffers *raw* K pages (cache dtype, no cast) so the whole-row
+    score einsum sees exactly the operands the gathered-dense path sees —
+    the bf16 case is where a sneaky fp32 upcast would show."""
+    q, kp, vp, tables, pos = _problem(11, c=3, h=4, kv=4, d=16, mb=4, block=4,
+                                      dtype=jnp.bfloat16)
+    ref = _dense_reference(q, kp, vp, tables, pos)
+    out = _kernel_out(q, kp, vp, tables, pos, kvh=2)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
@@ -175,7 +190,10 @@ def test_kernel_softcap_close_but_gated():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
                                rtol=1e-5)
     assert not _paged_kernel_eligible(2, 16, 4, 30.0, True)
-    assert not _paged_kernel_eligible(1, 16, 4, None, True)   # full-MHA
+    # full-MHA is in the envelope via the whole-row finish einsum — but
+    # only when a kvh >= 2 grid split exists, so kv == 1 stays gathered
+    assert _paged_kernel_eligible(1, 16, 4, None, True)
+    assert not _paged_kernel_eligible(1, 16, 4, None, True, kv=1)
     assert _paged_kernel_eligible(2, 16, 4, None, True)
     # a whole-row scratch past the VMEM budget has no tuning candidate —
     # the gate must route it to the gather instead of letting the tuner
@@ -189,6 +207,16 @@ def test_kernel_rejects_non_dividing_kvh():
     with pytest.raises(ValueError, match="must divide"):
         paged_attention_pallas(q[:, 0].reshape(2, 4, 2, 16), kp, vp, tables,
                                pos, kvh=3, interpret=True)
+
+
+def test_kernel_rejects_full_mha_single_head_step():
+    """g == 1 with kvh == 1 is outside the bit-identity envelope (a
+    single-head whole-row slice lowers to a different contraction) — the
+    kernel refuses it rather than return close-but-off bits."""
+    q, kp, vp, tables, pos = _problem(41, c=2, h=4, kv=4, d=16, mb=2, block=4)
+    with pytest.raises(ValueError, match="kvh >= 2"):
+        paged_attention_pallas(q[:, 0].reshape(2, 4, 1, 16), kp, vp, tables,
+                               pos, kvh=1, interpret=True)
 
 
 # ------------------------------------------------------- layer dispatch
@@ -208,11 +236,24 @@ def test_layer_dispatch_kernel_matches_jnp_bitwise():
         paged_decode_attention(q, paged, q_position=pos, kernel_impl="mosaic")
 
 
+def test_layer_dispatch_full_mha_uses_kernel_bitwise():
+    """Full-MHA (g == 1, kv >= 2) is served by the kernel's whole-row
+    finish path — forced dispatch must be bitwise the gathered-dense
+    result, same contract as the GQA layouts."""
+    q, kp, vp, tables, pos = _problem(31, c=2, h=2, kv=2, d=16, mb=3, block=4)
+    paged = PagedKV(kp, vp, tables)
+    out = paged_decode_attention(q, paged, q_position=pos,
+                                 kernel_impl="pallas_tuned")
+    ref = _dense_reference(q, kp, vp, tables, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 def test_layer_dispatch_ineligible_falls_back():
-    """Full-MHA (g == 1) forced to "pallas_tuned" must still serve the
-    gathered-dense result — the eligibility gate, not the caller, owns the
-    envelope."""
-    q, kp, vp, tables, pos = _problem(23, c=2, h=2, kv=2, d=16, mb=3, block=4)
+    """Single-KV-head full-MHA (h == kv == 1: no kvh >= 2 grid split
+    exists, so the tuning grid is empty) forced to "pallas_tuned" must
+    still serve the gathered-dense result — the eligibility gate, not the
+    caller, owns the envelope."""
+    q, kp, vp, tables, pos = _problem(23, c=2, h=1, kv=1, d=16, mb=3, block=4)
     paged = PagedKV(kp, vp, tables)
     out = paged_decode_attention(q, paged, q_position=pos,
                                  kernel_impl="pallas_tuned")
@@ -244,9 +285,11 @@ def _cfg(family, **kw):
     return ModelConfig(**base).validate()
 
 
-#: GQA head layouts (g = 2) so the forced-kernel runs actually exercise the
-#: Pallas path on every attention site; the full-MHA fallback is covered by
-#: test_layer_dispatch_ineligible_falls_back and tests/test_paging.py.
+#: GQA head layouts (g = 2) so the forced-kernel runs exercise the per-page
+#: score path on every attention site; the full-MHA (g = 1, whole-row
+#: finish) kernel path gets its own engine run in
+#: test_fused_engine_full_mha_streams_bit_identical, and the remaining
+#: gather fallback (kv == 1) in test_layer_dispatch_ineligible_falls_back.
 FAMILIES = [
     _cfg("dense"),
     _cfg("ssm", n_kv_heads=1, d_ff=0, ssm_state=16, ssm_headdim=16,
@@ -290,6 +333,15 @@ def test_fused_engine_streams_bit_identical(cfg):
     sequential baseline bit-for-bit for all three families."""
     _streams_match_baseline(_force_kernel(cfg), capacity=2, block=4,
                             n_blocks=None, plens=[4, 4, 8], gens=[6, 3, 5])
+
+
+def test_fused_engine_full_mha_streams_bit_identical():
+    """Full-MHA (H == KV) end-to-end: the whole-row kernel path — not the
+    gather fallback this layout used to take — forced on every attention
+    site, streams still bit-identical to the sequential baseline."""
+    cfg = _force_kernel(_cfg("dense", n_kv_heads=4))
+    _streams_match_baseline(cfg, capacity=2, block=4, n_blocks=None,
+                            plens=[4, 8], gens=[5, 4])
 
 
 def test_fused_engine_survives_preemption_churn():

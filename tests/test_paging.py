@@ -82,7 +82,10 @@ def _entry(uid, prompt_len=4, gen=2):
 
 def test_pool_exhausted_is_typed_backpressure():
     """Both pools refuse capacity with one typed exception the engine can
-    catch — a RuntimeError subclass, so untyped callers still fail loud."""
+    catch — a RuntimeError subclass, so untyped callers still fail loud.
+    Page-budget refusals carry machine-readable ``pages_needed`` /
+    ``pages_free`` (schedulers decide from numbers, not message parsing);
+    non-page refusals leave both ``None``."""
     assert issubclass(PoolExhausted, RuntimeError)
     cfg = CASES[0]
     m = bind(cfg)
@@ -90,23 +93,28 @@ def test_pool_exhausted_is_typed_backpressure():
 
     contiguous = SlotPool(m, capacity=1, max_seq=8)
     contiguous.admit(_entry("a"), single)
-    with pytest.raises(PoolExhausted, match="full"):
+    with pytest.raises(PoolExhausted, match="full") as exc:
         contiguous.admit(_entry("b"), single)
+    assert exc.value.pages_needed is None and exc.value.pages_free is None
 
     paged = PagedSlotPool(m, capacity=2, max_seq=16, block=4, n_blocks=2)
     paged.admit(_entry("c", prompt_len=4, gen=2), single)      # 1 page
-    with pytest.raises(PoolExhausted, match="pages"):
+    with pytest.raises(PoolExhausted, match="pages") as exc:
         paged.admit(_entry("d", prompt_len=8, gen=2),
                     _fake_single(m, 8))                        # needs 2
+    assert exc.value.pages_needed == 3     # ceil((8 prompt + 2 gen) / 4)
+    assert exc.value.pages_free == 1
     # decode-time growth hits the same typed refusal when the pool is dry
     paged.admit(_entry("e", prompt_len=4, gen=2), single)
-    with pytest.raises(PoolExhausted):
+    with pytest.raises(PoolExhausted) as exc:
         paged.ensure_page(0, 4)                                # page 1 of 'c'
+    assert exc.value.pages_needed == 1 and exc.value.pages_free == 0
     # ...and over-length growth is refused even with pages free
     roomy = PagedSlotPool(m, capacity=1, max_seq=8, block=4)
     roomy.admit(_entry("f", prompt_len=4, gen=2), single)
-    with pytest.raises(PoolExhausted, match="max_seq"):
+    with pytest.raises(PoolExhausted, match="max_seq") as exc:
         roomy.ensure_page(0, 8)
+    assert exc.value.pages_needed is None and exc.value.pages_free is None
 
 
 # ------------------------------------------------------------ round-trip
