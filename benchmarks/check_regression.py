@@ -20,6 +20,12 @@ percentiles on a tiny smoke workload are dominated by the same scheduler
 noise the ``--min-us`` floor exists for. A missing serving trajectory is
 not an error (the gate predates it on old branches).
 
+Exit codes: 0 all compared rows within the factor; 1 a regression was
+found or a trajectory file was unreadable; ``EXIT_NO_BASELINE`` (3) the
+trajectory is empty or holds no earlier run with the latest run's
+signature — the gate had nothing to gate, which CI must surface rather
+than count as a pass.
+
 Caveat: the signature carries no machine identity, so the last committed
 record may come from different hardware than the CI runner (each record's
 ``host``/``cpus`` fields say where it ran). The 2x factor absorbs typical
@@ -43,6 +49,12 @@ from .serving import DEFAULT_TRAJECTORY as SERVING_TRAJECTORY
 
 DEFAULT_FACTOR = 2.0
 DEFAULT_MIN_US = 500.0
+
+# Distinct from 1 (regression / unreadable) so CI can tell "the gate had
+# nothing to gate" — an empty trajectory or a signature with no earlier
+# run — from "the gate passed". Silently passing here hid exactly the
+# runs the gate exists for.
+EXIT_NO_BASELINE = 3
 
 
 def _signature(run: dict) -> tuple:
@@ -100,13 +112,15 @@ def check(path: Path, *, factor: float = DEFAULT_FACTOR,
         return 1
     runs = doc.get("runs") or []
     if not runs:
-        print(f"[check_regression] {path} has no runs; nothing to compare")
-        return 0
+        print(f"[check_regression] NO-BASELINE {path.name}: trajectory has "
+              f"no runs — the gate checked nothing", file=sys.stderr)
+        return EXIT_NO_BASELINE
     latest, baseline = find_baseline(runs)
     if baseline is None:
-        print(f"[check_regression] {path.name}: no earlier run matches "
-              f"signature {_signature(latest)}; nothing to compare")
-        return 0
+        print(f"[check_regression] NO-BASELINE {path.name}: no earlier run "
+              f"matches signature {_signature(latest)} — the gate checked "
+              f"nothing", file=sys.stderr)
+        return EXIT_NO_BASELINE
     failures = compare(latest, baseline, factor=factor, min_us=min_us)
     n = sum(1 for r in latest.get("rows", []) if r.get("us_per_call", 0) > 0)
     if failures:
@@ -127,10 +141,13 @@ def main() -> None:
     ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
     ap.add_argument("--min-us", type=float, default=DEFAULT_MIN_US)
     args = ap.parse_args()
-    rc = check(args.json, factor=args.factor, min_us=args.min_us)
-    rc |= check(args.serving_json, factor=args.factor, min_us=args.min_us,
-                optional=True)
-    raise SystemExit(rc)
+    codes = [check(args.json, factor=args.factor, min_us=args.min_us),
+             check(args.serving_json, factor=args.factor, min_us=args.min_us,
+                   optional=True)]
+    # a real regression (1) outranks a missing baseline (EXIT_NO_BASELINE)
+    raise SystemExit(1 if 1 in codes
+                     else EXIT_NO_BASELINE if EXIT_NO_BASELINE in codes
+                     else 0)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""repro-lint: repo-native static analysis for the SC serving stack.
+
+Two layers (DESIGN.md §11):
+
+* **AST lints** (:mod:`.rules`, ``repro-lint`` CLI) — five repo-specific
+  rules (R1 trace-safety, R2 recompilation-hazard, R3 typed-backpressure,
+  R4 cache-key-completeness, R5 dtype-drift) over :mod:`.base`'s rule
+  engine, with mandatory-justification suppression comments.
+* **jaxpr contract audits** (:mod:`.contracts`) — trace representative
+  GEMM/attention shapes and assert structural properties the lints cannot
+  see: integer-only SC popcount path, identical contraction dim-orders
+  between the fused paged kernel and the gathered-dense path, and a
+  bounded compile-count engine schedule.
+"""
+from .base import Finding, Rule, Suppressions, run_lint
+from .rules import DEFAULT_RULES
+
+__all__ = ["Finding", "Rule", "Suppressions", "run_lint", "DEFAULT_RULES"]

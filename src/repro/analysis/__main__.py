@@ -1,0 +1,4 @@
+"""``python -m repro.analysis`` → the repro-lint CLI."""
+from .cli import main
+
+raise SystemExit(main())

@@ -1,0 +1,360 @@
+"""The repo-specific lint rules R1–R5 (DESIGN.md §11).
+
+Each rule encodes an invariant that a past PR's bug (or near-miss) showed
+is too easy to regress silently; the module docstring of each rule class
+names it.  All rules are purely syntactic over one module's AST — no
+imports are executed — so they favour precision over recall: code a rule
+cannot prove wrong is left alone, and the jaxpr contract audits
+(``repro.analysis.contracts``) catch the semantic remainder.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .base import Finding, Rule
+from .scopes import FuncDef, dotted_name, find_traced_contexts, is_jit_callee, \
+    is_pallas_callee
+
+__all__ = ["TraceSafety", "RecompilationHazard", "TypedBackpressure",
+           "CacheKeyCompleteness", "DtypeDrift", "DEFAULT_RULES"]
+
+# Attribute reads that are static under trace (shapes are Python ints).
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "weak_type",
+                "sharding"}
+# Builtins whose result is host-static even on a tracer argument.
+_PRUNE_CALLS = {"isinstance", "len", "getattr", "hasattr", "type", "id",
+                "repr", "str"}
+# Calls whose *result* is a tracer even with no tracer argument.
+_TRACED_SOURCE_CALLS = {"program_id", "num_programs"}
+
+
+class _TaintScan(ast.NodeVisitor):
+    """Does an expression reference a tainted name (modulo static reads)?"""
+
+    def __init__(self, env: set[str]):
+        self.env = env
+        self.hit = False
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in _SHAPE_ATTRS:
+            return                       # x.shape et al. are static
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        callee = dotted_name(node.func)
+        if callee in _PRUNE_CALLS:
+            return
+        if callee and callee.split(".")[-1] in _TRACED_SOURCE_CALLS:
+            self.hit = True
+            return
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare):
+        # `x is None` / `x is not None` inspects static pytree structure
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if node.id in self.env:
+            self.hit = True
+
+
+def _tainted(node: ast.AST | None, env: set[str]) -> bool:
+    if node is None:
+        return False
+    scan = _TaintScan(env)
+    scan.visit(node)
+    return scan.hit
+
+
+class TraceSafety(Rule):
+    """R1: no host-Python reads or branches on traced values.
+
+    Inside jit/pallas-traced functions (kernels, the ``build_*`` step
+    bodies, model forward paths), ``.item()``, ``int()/float()/bool()``
+    coercions, and ``if``/``while`` on a value that flows from a traced
+    argument either fail at trace time or — worse — silently bake one
+    branch into the compiled executable.  Shape/dtype attribute reads and
+    ``is None`` checks are static and stay allowed.
+    """
+
+    id = "R1"
+    name = "trace-safety"
+    scope = ("repro/kernels/", "repro/launch/steps.py", "repro/models/")
+
+    def check(self, tree, src, path):
+        for ctx in find_traced_contexts(tree):
+            yield from self._walk(ctx.func.body, set(ctx.traced_params), path)
+
+    # -- statement walker with a forward-flowing taint env ----------------
+    def _walk(self, stmts, env: set[str], path) -> Iterable[Finding]:
+        for node in stmts:
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                tainted = _tainted(node.value, env)
+                if isinstance(node, ast.AugAssign):
+                    tainted = tainted or _tainted(node.target, env)
+                yield from self._scan_expr(node.value, env, path)
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for name in self._target_names(targets):
+                    (env.add if tainted else env.discard)(name)
+            elif isinstance(node, (ast.If, ast.While)):
+                if _tainted(node.test, env):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        path, node.lineno,
+                        f"`{kind}` on a traced value inside a traced "
+                        f"context — use jnp.where/lax.cond/pl.when, or "
+                        f"hoist the flag to a static argument")
+                yield from self._scan_expr(node.test, env, path)
+                yield from self._walk(node.body, env, path)
+                yield from self._walk(node.orelse, env, path)
+            elif isinstance(node, ast.For):
+                yield from self._walk(node.body, env, path)
+                yield from self._walk(node.orelse, env, path)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                yield from self._walk(node.body, env, path)
+            elif isinstance(node, ast.Try):
+                for block in (node.body, node.orelse, node.finalbody):
+                    yield from self._walk(block, env, path)
+                for h in node.handlers:
+                    yield from self._walk(h.body, env, path)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs are scan/loop bodies: their params are traced
+                inner = set(env)
+                inner.update(a.arg for a in node.args.posonlyargs
+                             + node.args.args + node.args.kwonlyargs)
+                yield from self._walk(node.body, inner, path)
+            elif isinstance(node, (ast.Return, ast.Expr)):
+                yield from self._scan_expr(node.value, env, path)
+
+    @staticmethod
+    def _target_names(targets) -> Iterable[str]:
+        for t in targets:
+            if isinstance(t, ast.Name):
+                yield t.id
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                yield from TraceSafety._target_names(t.elts)
+
+    def _scan_expr(self, node, env: set[str], path) -> Iterable[Finding]:
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                callee = sub.func
+                if (isinstance(callee, ast.Attribute)
+                        and callee.attr == "item"
+                        and _tainted(callee.value, env)):
+                    yield self.finding(
+                        path, sub.lineno,
+                        "`.item()` on a traced value — fails under trace "
+                        "and forces a device sync; keep it an array")
+                name = dotted_name(callee)
+                if name in ("int", "float", "bool") and sub.args \
+                        and _tainted(sub.args[0], env):
+                    yield self.finding(
+                        path, sub.lineno,
+                        f"`{name}()` coercion of a traced value — breaks "
+                        f"under trace; use jnp casts or astype")
+            elif isinstance(sub, ast.IfExp) and _tainted(sub.test, env):
+                yield self.finding(
+                    path, sub.lineno,
+                    "conditional expression on a traced value — use "
+                    "jnp.where instead")
+
+
+class RecompilationHazard(Rule):
+    """R2: jit/pallas_call built per call must pass through a memo.
+
+    PR 3's ``serve.py::generate`` rebuilt ``jax.jit(...)`` every request,
+    recompiling the model per prompt.  Any ``jax.jit``/``pallas_call``
+    constructed inside a function body must be reachable only through an
+    ``lru_cache``/``cache`` memo (the ``cached_*``/``build_*`` pattern) or
+    sit inside an already-jitted function, whose trace cache memoizes it.
+    """
+
+    id = "R2"
+    name = "recompilation-hazard"
+    scope = ("repro/",)
+
+    _MEMO = {"functools.lru_cache", "lru_cache", "functools.cache", "cache"}
+
+    def _is_memoized(self, func: FuncDef) -> bool:
+        for deco in func.decorator_list:
+            target = deco.func if isinstance(deco, ast.Call) else deco
+            if dotted_name(target) in self._MEMO:
+                return True
+        return False
+
+    def check(self, tree, src, path):
+        traced = {id(c.func) for c in find_traced_contexts(tree)
+                  if c.reason == "jit-decorated"}
+        memoized = [n for n in ast.walk(tree)
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and self._is_memoized(n)]
+        called_by_memo = {
+            dotted_name(c.func)
+            for m in memoized for c in ast.walk(m)
+            if isinstance(c, ast.Call)}
+
+        def exempt(chain: list[FuncDef]) -> bool:
+            return any(self._is_memoized(f) or id(f) in traced
+                       or f.name in called_by_memo for f in chain)
+
+        yield from self._scan(tree.body, [], exempt, path)
+
+    def _scan(self, stmts, chain, exempt, path) -> Iterable[Finding]:
+        for node in stmts:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan(node.body, chain + [node], exempt, path)
+            elif isinstance(node, ast.ClassDef):
+                yield from self._scan(node.body, chain, exempt, path)
+            else:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call) and (
+                            is_jit_callee(sub.func)
+                            or is_pallas_callee(sub.func)):
+                        if chain and not exempt(chain):
+                            kind = "jax.jit" if is_jit_callee(sub.func) \
+                                else "pallas_call"
+                            yield self.finding(
+                                path, sub.lineno,
+                                f"{kind} built inside "
+                                f"`{chain[-1].name}` with no lru_cache "
+                                f"memo on the call path — recompiles per "
+                                f"call (the PR 3 serve.py bug)")
+
+
+class TypedBackpressure(Rule):
+    """R3: capacity/allocation paths raise typed errors, not bare builtins.
+
+    The engine turns ``PoolExhausted`` into wait/preempt scheduling; a bare
+    ``ValueError``/``RuntimeError`` from ``serving/`` or the cache ops
+    is indistinguishable from a crash.  Config mistakes raise
+    ``ConfigError``, layout-contract breaks ``CacheLayoutError``, engine
+    bugs ``EngineInvariantError`` (all in ``repro.errors``).
+    """
+
+    id = "R3"
+    name = "typed-backpressure"
+    scope = ("repro/serving/", "repro/models/cache_ops.py")
+
+    _BARE = {"ValueError", "RuntimeError", "Exception"}
+
+    def check(self, tree, src, path):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Raise) and isinstance(node.exc, ast.Call):
+                name = dotted_name(node.exc.func)
+                if name in self._BARE:
+                    yield self.finding(
+                        path, node.lineno,
+                        f"bare `{name}` raised on a serving path — use "
+                        f"PoolExhausted (capacity) or a typed error from "
+                        f"repro.errors (ConfigError / CacheLayoutError / "
+                        f"EngineInvariantError)")
+
+
+class CacheKeyCompleteness(Rule):
+    """R4: every AutotuneCache key embeds the backend and interpret mode.
+
+    The schema-v1 cache keyed entries only by shape, so interpret-mode CPU
+    timings poisoned TPU lookups.  Every ``key``/``*_key`` method of an
+    ``AutotuneCache`` class must fold both ``backend`` and the interpret
+    mode (``_mode(...)`` or ``interpret``) into each returned key string.
+    """
+
+    id = "R4"
+    name = "cache-key-completeness"
+    scope = ()                      # fires only inside AutotuneCache classes
+
+    def check(self, tree, src, path):
+        for cls in ast.walk(tree):
+            if not (isinstance(cls, ast.ClassDef)
+                    and "AutotuneCache" in cls.name):
+                continue
+            for func in cls.body:
+                if not (isinstance(func, ast.FunctionDef)
+                        and (func.name == "key"
+                             or func.name.endswith("_key"))):
+                    continue
+                for ret in ast.walk(func):
+                    if not isinstance(ret, ast.Return) or ret.value is None:
+                        continue
+                    names = {n.id for n in ast.walk(ret.value)
+                             if isinstance(n, ast.Name)}
+                    calls = {dotted_name(c.func) or ""
+                             for c in ast.walk(ret.value)
+                             if isinstance(c, ast.Call)}
+                    has_mode = "interpret" in names or any(
+                        c.split(".")[-1] == "_mode" for c in calls)
+                    missing = [seg for seg, ok in
+                               [("backend", "backend" in names),
+                                ("interpret", has_mode)] if not ok]
+                    if missing:
+                        yield self.finding(
+                            path, ret.lineno,
+                            f"AutotuneCache.{func.name} returns a key "
+                            f"missing the {'/'.join(missing)} segment(s) — "
+                            f"the schema-v1 cache-poisoning bug")
+
+
+class DtypeDrift(Rule):
+    """R5: SC/attention kernels keep accumulators explicit and full-width.
+
+    The count-identity contract (DESIGN.md §2) needs the popcount and
+    attention contractions to be exact: a ``.astype(bfloat16/float16)`` or
+    a dot/einsum that leaves ``preferred_element_type`` to backend default
+    lets the MXU accumulate in a narrower type and silently drift from the
+    reference counts.
+    """
+
+    id = "R5"
+    name = "dtype-drift"
+    scope = ("repro/kernels/", "repro/core/sc_matmul.py")
+
+    _HALF = {"bfloat16", "float16", "half"}
+    _CONTRACTIONS = {"dot", "dot_general", "einsum", "matmul"}
+
+    def _is_half(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            return node.attr in self._HALF
+        if isinstance(node, ast.Constant):
+            return node.value in self._HALF
+        return False
+
+    def check(self, tree, src, path):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = node.func
+            last = callee.attr if isinstance(callee, ast.Attribute) \
+                else dotted_name(callee)
+            if last == "astype" and node.args \
+                    and self._is_half(node.args[0]):
+                yield self.finding(
+                    path, node.lineno,
+                    "half-precision astype inside an SC/attention kernel "
+                    "breaks the count-identity contract")
+            elif last == "convert_element_type" and len(node.args) > 1 \
+                    and self._is_half(node.args[1]):
+                yield self.finding(
+                    path, node.lineno,
+                    "half-precision convert_element_type inside an "
+                    "SC/attention kernel breaks the count-identity contract")
+            elif last in self._CONTRACTIONS \
+                    and isinstance(callee, ast.Attribute) \
+                    and dotted_name(callee) is not None \
+                    and not any(kw.arg == "preferred_element_type"
+                                for kw in node.keywords):
+                yield self.finding(
+                    path, node.lineno,
+                    f"`{last}` without preferred_element_type — the "
+                    f"accumulator dtype is backend-chosen and can drift "
+                    f"from the count-identical reference")
+
+
+DEFAULT_RULES: tuple[Rule, ...] = (
+    TraceSafety(), RecompilationHazard(), TypedBackpressure(),
+    CacheKeyCompleteness(), DtypeDrift())

@@ -1,0 +1,164 @@
+"""Traced-context detection shared by the trace-safety rules.
+
+A *traced context* is a function whose parameters are (mostly) JAX tracers
+at run time, so host-Python control flow on them is a bug.  The repo has
+three idioms, all recognised syntactically:
+
+* a function decorated with ``jax.jit`` — directly or through
+  ``functools.partial(jax.jit, static_argnames=...)``; the named static
+  arguments stay host values;
+* a function *passed* to a ``jax.jit(...)`` or ``pl.pallas_call(...)``
+  call (the ``build_*`` step factories wrap local ``def``\\ s this way);
+* a Pallas kernel body: any function with ``*_ref`` parameters.  Following
+  the repo's ``functools.partial(_kernel, static0, static1, ...)`` idiom,
+  every parameter *before the first* ``*_ref`` parameter is a pre-bound
+  host value and every ``*_ref`` (and anything after) is traced.
+
+Purely syntactic — no imports are resolved — so the detector errs on the
+side of silence: a function it cannot prove traced is skipped.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+__all__ = ["TracedContext", "find_traced_contexts", "dotted_name",
+           "is_jit_callee", "is_pallas_callee"]
+
+FuncDef = ast.FunctionDef | ast.AsyncFunctionDef
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jit_callee(node: ast.AST) -> bool:
+    return dotted_name(node) in ("jax.jit", "jit")
+
+
+def is_pallas_callee(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    return name is not None and name.split(".")[-1] == "pallas_call"
+
+
+@dataclass
+class TracedContext:
+    """One function whose non-static parameters are tracers."""
+    func: FuncDef
+    static_params: frozenset[str]
+    reason: str                      # "jit-decorated" | "jit-arg" | "kernel"
+
+    @property
+    def traced_params(self) -> set[str]:
+        args = self.func.args
+        names = [a.arg for a in
+                 args.posonlyargs + args.args + args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        return {n for n in names if n not in self.static_params}
+
+
+def _str_elts(node: ast.AST | None) -> set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def _jit_static_params(call: ast.Call, func: FuncDef) -> frozenset[str]:
+    """static_argnames / static_argnums of a jit(...) call, as param names."""
+    statics: set[str] = set()
+    pos_names = [a.arg for a in func.args.posonlyargs + func.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            statics |= _str_elts(kw.value)
+        elif kw.arg == "static_argnums":
+            nums = []
+            if isinstance(kw.value, ast.Constant):
+                nums = [kw.value.value]
+            elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                nums = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+            statics |= {pos_names[i] for i in nums
+                        if isinstance(i, int) and i < len(pos_names)}
+    return frozenset(statics)
+
+
+def _kernel_statics(func: FuncDef) -> frozenset[str] | None:
+    """Leading pre-bound params of a ``*_ref`` kernel, or None if not one."""
+    names = [a.arg for a in func.args.posonlyargs + func.args.args]
+    ref_at = next((i for i, n in enumerate(names) if n.endswith("_ref")), None)
+    if ref_at is None:
+        return None
+    return frozenset(names[:ref_at])
+
+
+@dataclass
+class _Collector(ast.NodeVisitor):
+    contexts: dict[int, TracedContext] = field(default_factory=dict)
+    _defs: dict[str, list[FuncDef]] = field(default_factory=dict)
+    _wrapped: list[tuple[str, ast.Call, str]] = field(default_factory=list)
+
+    def _add(self, func: FuncDef, statics: frozenset[str], reason: str):
+        self.contexts.setdefault(
+            id(func), TracedContext(func, statics, reason))
+
+    def visit_FunctionDef(self, node: FuncDef):
+        self._defs.setdefault(node.name, []).append(node)
+        for deco in node.decorator_list:
+            if is_jit_callee(deco):
+                self._add(node, frozenset(), "jit-decorated")
+            elif isinstance(deco, ast.Call):
+                callee = dotted_name(deco.func)
+                if is_jit_callee(deco.func):
+                    self._add(node, _jit_static_params(deco, node),
+                              "jit-decorated")
+                elif (callee in ("functools.partial", "partial")
+                        and deco.args and is_jit_callee(deco.args[0])):
+                    self._add(node, _jit_static_params(deco, node),
+                              "jit-decorated")
+        statics = _kernel_statics(node)
+        if statics is not None:
+            self._add(node, statics, "kernel")
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        if (is_jit_callee(node.func) or is_pallas_callee(node.func)) \
+                and node.args:
+            target = node.args[0]
+            # unwrap functools.partial(kernel, ...) around the callee
+            if isinstance(target, ast.Call) and dotted_name(target.func) in (
+                    "functools.partial", "partial") and target.args:
+                target = target.args[0]
+            if isinstance(target, ast.Name):
+                reason = "jit-arg" if is_jit_callee(node.func) else "kernel"
+                self._wrapped.append((target.id, node, reason))
+        self.generic_visit(node)
+
+    def resolve(self):
+        for name, call, reason in self._wrapped:
+            for func in self._defs.get(name, ()):
+                statics = (_kernel_statics(func) or frozenset()) \
+                    if reason == "kernel" else _jit_static_params(call, func)
+                self._add(func, statics, reason)
+
+
+def find_traced_contexts(tree: ast.Module) -> list[TracedContext]:
+    c = _Collector()
+    c.visit(tree)
+    c.resolve()
+    return list(c.contexts.values())

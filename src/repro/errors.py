@@ -1,0 +1,41 @@
+"""Typed error hierarchy shared across the serving stack (DESIGN.md §11).
+
+The R3 lint rule ("typed backpressure") forbids raising bare
+``ValueError``/``RuntimeError`` from capacity or allocation paths in
+``serving/`` and ``models/cache_ops.py``: callers need to distinguish
+*capacity* exhaustion (retryable — the engine waits, preempts, or sheds
+load) from *configuration* mistakes (non-retryable — fix the config) and
+from *invariant* violations (a bug in the engine itself).  Three typed
+errors cover the non-capacity cases; ``serving.slots.PoolExhausted``
+remains the capacity signal.
+
+Each class subclasses the builtin it replaces, so pre-existing callers
+(and tests) that catch ``ValueError``/``RuntimeError`` keep working.
+"""
+
+
+class ConfigError(ValueError):
+    """A caller-supplied configuration or request is malformed.
+
+    Raised for bad pool geometry, unknown mode strings, duplicate or
+    invalid requests — anything that retrying cannot fix.  Subclasses
+    ``ValueError`` for backward compatibility.
+    """
+
+
+class CacheLayoutError(ValueError):
+    """A cache tensor violates the uniform slot-cache layout contract.
+
+    The serving cache ops (``models/cache_ops.py``) require every
+    attention cache leaf to be ``(capacity, S, H, D)`` and every conv/SSM
+    state leaf to carry a leading slot axis; a mismatch means a model
+    wired its ``decode_step`` incorrectly, not that the pool is full.
+    """
+
+
+class EngineInvariantError(RuntimeError):
+    """The engine violated one of its own scheduling invariants.
+
+    Signals a bug in the step scheduler (e.g. the engine drained with a
+    request still unfinished) rather than a capacity or config problem.
+    """

@@ -166,7 +166,8 @@ def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
         # literally the dense path's PV einsum on this slot's rows, with
         # the page-major scratch flattened back to the dense S axis
         v = vb_ref[...].reshape(1, s_len, kvh, -1)   # (1, S, kvh, d)
-        out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v)  # fp32, like the dense PV
+        out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v,  # fp32, like the dense PV
+                         preferred_element_type=jnp.float32)
         o_ref[0] = out[0, :, :, 0].astype(o_ref.dtype)
 
 

@@ -56,10 +56,12 @@ def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
     k = jnp.repeat(k, g, axis=1)
     v = jnp.repeat(v, g, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * (d ** -0.5)
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
     if causal:
         mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
         s = jnp.where(mask[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
     return out.astype(q.dtype)

@@ -24,7 +24,7 @@ from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
            "build_paged_decode_step", "build_chunked_prefill_step",
-           "cached_prefill_step", "cached_decode_step",
+           "cached_train_step", "cached_prefill_step", "cached_decode_step",
            "cached_paged_decode_step", "cached_chunked_prefill_step",
            "prompt_buckets", "bucket_for", "abstract_params",
            "abstract_opt_state", "activation_spec", "opt_pspecs"]
@@ -333,6 +333,15 @@ def build_chunked_prefill_step(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
 # These wrappers memoize the *builders* on (cfg, mesh, shape) — cfg is a
 # frozen dataclass and Mesh hashes by device grid, so equal serving
 # configurations share one jitted step across requests and engine instances.
+
+@functools.lru_cache(maxsize=64)
+def cached_train_step(cfg: ModelConfig, mesh: Mesh, *,
+                      optc: AdamWConfig | None = None,
+                      peak_lr: float = 3e-4, warmup: int = 100,
+                      total_steps: int = 10_000):
+    return build_train_step(cfg, mesh, optc=optc, peak_lr=peak_lr,
+                            warmup=warmup, total_steps=total_steps)
+
 
 @functools.lru_cache(maxsize=64)
 def cached_prefill_step(cfg: ModelConfig, mesh: Mesh, *, batch_size: int,

@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import CacheLayoutError, ConfigError
+
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
            "truncate_seq", "paged_init", "paged_gather", "paged_commit",
            "paged_insert", "paged_evict", "paged_read", "paged_token_entry",
@@ -82,7 +84,7 @@ def _is_seq(path: tuple) -> bool:
 
 def _check_rank(leaf) -> None:
     if leaf.ndim < SLOT_AXIS + 1:
-        raise ValueError(
+        raise CacheLayoutError(
             f"cache leaf of rank {leaf.ndim} cannot carry the slot axis at "
             f"{SLOT_AXIS}; the family cache violates the slot contract")
 
@@ -192,7 +194,7 @@ def paged_init(init_cache: Callable[[int, int], Any], capacity: int,
     one on demand.
     """
     if n_blocks < 1 or block < 1 or capacity < 1:
-        raise ValueError(
+        raise ConfigError(
             f"paged pool needs capacity/n_blocks/block ≥ 1, got "
             f"{capacity}/{n_blocks}/{block}")
     by_block = init_cache(n_blocks + 1, block)
@@ -297,7 +299,7 @@ def paged_insert(data: Any, single: Any, slot: int,
             return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype), start)
         lead, s1 = sl.shape[0], sl.shape[2]
         if n_pages * block < s1:
-            raise ValueError(
+            raise CacheLayoutError(
                 f"{n_pages} pages of {block} tokens cannot hold a "
                 f"{s1}-token prefill cache")
         x = sl[:, 0]                                      # (lead, S1, *tail)

@@ -1,10 +1,12 @@
 """Continuous-batching serving: request queue, paged/contiguous slot cache
 pools, and the engine loop driving the mesh-sharded prefill/decode steps
 (DESIGN.md §7–§8)."""
+from repro.errors import ConfigError, EngineInvariantError
+
 from .engine import Engine, default_serving_mesh
 from .queue import Request, RequestQueue, RequestResult
 from .slots import PagedSlotPool, PoolExhausted, SlotEntry, SlotPool
 
 __all__ = ["Engine", "default_serving_mesh", "Request", "RequestQueue",
            "RequestResult", "SlotEntry", "SlotPool", "PagedSlotPool",
-           "PoolExhausted"]
+           "PoolExhausted", "ConfigError", "EngineInvariantError"]

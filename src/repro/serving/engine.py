@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.errors import ConfigError, EngineInvariantError
 from repro.launch.steps import (bucket_for, cached_chunked_prefill_step,
                                 cached_decode_step, cached_paged_decode_step,
                                 cached_prefill_step, prompt_buckets)
@@ -126,7 +127,7 @@ class Engine:
                  prefill_budget: int | None = None):
         cfg.validate()
         if prefill_mode not in ("chunked", "oneshot"):
-            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+            raise ConfigError(f"unknown prefill_mode {prefill_mode!r}")
         self.cfg = cfg
         self.capacity = capacity
         self.max_seq = max_seq
@@ -512,7 +513,7 @@ class Engine:
                 return
             self.step()
             if not self.has_work and not buf and not done:
-                raise RuntimeError(
+                raise EngineInvariantError(
                     f"engine drained without finishing {request.uid!r}")
 
     # ----------------------------------------------------------- the loop

@@ -16,6 +16,8 @@ from typing import Any
 
 import numpy as np
 
+from repro.errors import ConfigError
+
 __all__ = ["Request", "RequestResult", "RequestQueue"]
 
 
@@ -41,10 +43,10 @@ class Request:
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
         if self.prompt.ndim not in (1, 2) or self.prompt.shape[0] == 0:
-            raise ValueError(f"request {self.uid}: prompt must be a nonempty "
+            raise ConfigError(f"request {self.uid}: prompt must be a nonempty "
                              f"(S,) or (S, K) id array, got {self.prompt.shape}")
         if self.max_new_tokens < 1:
-            raise ValueError(f"request {self.uid}: max_new_tokens must be ≥ 1")
+            raise ConfigError(f"request {self.uid}: max_new_tokens must be ≥ 1")
 
     @property
     def prompt_len(self) -> int:
@@ -107,7 +109,7 @@ class RequestQueue:
 
     def submit(self, request: Request) -> None:
         if request.uid in self._seen:
-            raise ValueError(f"duplicate request uid {request.uid!r}")
+            raise ConfigError(f"duplicate request uid {request.uid!r}")
         self._seen.add(request.uid)
         self._q.append(request)
 

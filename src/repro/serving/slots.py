@@ -38,6 +38,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import ConfigError
 from repro.models import cache_ops
 from repro.models.cache_ops import slot_evict, slot_insert, slot_read
 
@@ -105,7 +106,7 @@ class SlotPool:
     def __init__(self, model, capacity: int, max_seq: int, *,
                  cache: Any = None):
         if capacity < 1:
-            raise ValueError("slot pool needs capacity ≥ 1")
+            raise ConfigError("slot pool needs capacity ≥ 1")
         self.capacity = capacity
         self.max_seq = max_seq
         self._model = model
@@ -203,14 +204,14 @@ class PagedSlotPool:
         pay. ``n_blocks`` defaults to no oversubscription.
         """
         if capacity < 1:
-            raise ValueError("slot pool needs capacity ≥ 1")
+            raise ConfigError("slot pool needs capacity ≥ 1")
         if block < 1:
-            raise ValueError("page size must be ≥ 1 token")
+            raise ConfigError("page size must be ≥ 1 token")
         block = min(block, max_seq)
         max_blocks = -(-max_seq // block)
         n_blocks = capacity * max_blocks if n_blocks is None else n_blocks
         if n_blocks < 1:
-            raise ValueError("paged pool needs a page budget ≥ 1")
+            raise ConfigError("paged pool needs a page budget ≥ 1")
         return block, max_blocks, n_blocks
 
     def __init__(self, model, capacity: int, max_seq: int, *,

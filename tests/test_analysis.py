@@ -1,0 +1,296 @@
+"""repro.analysis (ISSUE 7 / DESIGN.md §11): rule true-positives and
+near-misses for R1–R5, suppression syntax, the repo-clean gate, and the
+jaxpr contract audits (including failure injection)."""
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import DEFAULT_RULES, run_lint
+from repro.analysis import contracts
+from repro.analysis.cli import main as lint_main
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _lint(tmp_path, relpath, code):
+    """Write one fixture module at a scope-matching path and lint it."""
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    report = run_lint([p], list(DEFAULT_RULES))
+    return [f.rule for f in report.findings], report
+
+
+# ----------------------------------------------------------------- R1
+
+def test_r1_true_positive_branch_and_coercions(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/bad_kernel.py", """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:                  # branch on a tracer
+                x = x + 1
+            n = x.sum().item()         # host read of a tracer
+            return float(x)            # host coercion of a tracer
+    """)
+    assert rules.count("R1") == 3, report.findings
+
+
+def test_r1_true_positive_pallas_kernel_ref_taint(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/bad_ref.py", """
+        def _kernel(bits, x_ref, o_ref):
+            v = x_ref[...]
+            if v.sum() > 0:            # branch on ref contents
+                o_ref[...] = v
+    """)
+    assert "R1" in rules, report.findings
+
+
+def test_r1_near_miss_static_and_shape_branches(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/good_kernel.py", """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("causal", "window"))
+        def f(x, causal, window=None):
+            if causal:                 # static argument: fine
+                x = x + 1
+            if window is not None:     # pytree-structure check: fine
+                x = x - window
+            rows = x.shape[0]
+            if rows > 8:               # shape-derived: static under trace
+                x = x * 2
+            return x
+
+        def _kernel(bq, causal, x_ref, o_ref):
+            v = x_ref[...]
+            if causal:                 # pre-bound partial() static: fine
+                v = v + bq
+            o_ref[...] = v
+    """)
+    assert "R1" not in rules, report.findings
+
+
+# ----------------------------------------------------------------- R2
+
+def test_r2_true_positive_per_call_jit(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/launch/bad_serve.py", """
+        import jax
+
+        def generate(params, tokens):
+            step = jax.jit(lambda p, t: p @ t)   # rebuilt every call
+            return step(params, tokens)
+    """)
+    assert "R2" in rules, report.findings
+
+
+def test_r2_near_miss_memoized_builder_and_module_jit(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/launch/good_serve.py", """
+        import functools
+        import jax
+
+        compiled = jax.jit(lambda x: x + 1)      # module level: built once
+
+        @functools.lru_cache(maxsize=8)
+        def cached_step(n):
+            return build_step(n)
+
+        def build_step(n):
+            return jax.jit(lambda x: x * n)      # reached via the memo
+
+        @functools.partial(jax.jit, static_argnames=("interpret",))
+        def op(x, interpret=False):
+            from jax.experimental import pallas as pl
+            return pl.pallas_call(_kern, interpret=interpret)(x)
+    """)
+    assert "R2" not in rules, report.findings
+
+
+# ----------------------------------------------------------------- R3
+
+def test_r3_true_positive_bare_raise_on_serving_path(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/serving/bad_pool.py", """
+        def admit(free):
+            if not free:
+                raise RuntimeError("pool full")
+            if free < 0:
+                raise ValueError("bad capacity")
+    """)
+    assert rules.count("R3") == 2, report.findings
+
+
+def test_r3_near_miss_typed_errors_and_out_of_scope(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/serving/good_pool.py", """
+        from repro.errors import ConfigError
+        from repro.serving.slots import PoolExhausted
+
+        def admit(free, capacity):
+            if capacity < 1:
+                raise ConfigError("needs capacity >= 1")
+            if not free:
+                raise PoolExhausted("admission", 1, 0)
+    """)
+    assert "R3" not in rules, report.findings
+    # the same bare raise outside serving/cache_ops scope is not R3's business
+    rules, report = _lint(tmp_path, "src/repro/core/validation.py", """
+        def check(x):
+            raise ValueError("not a serving path")
+    """)
+    assert "R3" not in rules, report.findings
+
+
+# ----------------------------------------------------------------- R4
+
+def test_r4_true_positive_key_missing_segments(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/bad_cache.py", """
+        class AutotuneCache:
+            def key(self, m, n, k, backend):
+                return f"sc_gemm:{backend}:{m}x{n}x{k}"   # no interpret
+
+            def flash_key(self, shape, interpret):
+                return f"flash:{shape}:{interpret}"       # no backend
+    """)
+    assert rules.count("R4") == 2, report.findings
+
+
+def test_r4_near_miss_complete_keys(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/good_cache.py", """
+        class AutotuneCache:
+            def key(self, m, backend, interpret):
+                return f"sc_gemm:{backend}:{_mode(interpret, backend)}:{m}"
+
+            def flash_key(self, shape, backend, interpret):
+                return f"flash:{backend}:{interpret}:{shape}"
+
+            def lookup(self, name):          # not a key builder
+                return f"hit:{name}"
+    """)
+    assert "R4" not in rules, report.findings
+
+
+# ----------------------------------------------------------------- R5
+
+def test_r5_true_positive_half_cast_and_default_accumulator(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/bad_dtype.py", """
+        import jax.numpy as jnp
+
+        def _kernel(x_ref, y_ref, o_ref):
+            p = x_ref[...].astype(jnp.bfloat16)           # narrows counts
+            o_ref[...] = jnp.einsum("ij,jk->ik", p, y_ref[...])
+    """)
+    assert rules.count("R5") == 2, report.findings
+
+
+def test_r5_near_miss_full_width_and_out_of_scope(tmp_path):
+    rules, report = _lint(tmp_path, "src/repro/kernels/good_dtype.py", """
+        import jax.numpy as jnp
+
+        def _kernel(x_ref, y_ref, o_ref):
+            p = x_ref[...].astype(jnp.float32)
+            o_ref[...] = jnp.dot(p, y_ref[...],
+                                 preferred_element_type=jnp.float32)
+    """)
+    assert "R5" not in rules, report.findings
+    # layers outside the kernel scope may cast deliberately (bf16_probs)
+    rules, report = _lint(tmp_path, "src/repro/models/layers_extra.py", """
+        import jax.numpy as jnp
+
+        def probs(p):
+            return p.astype(jnp.bfloat16)
+    """)
+    assert "R5" not in rules, report.findings
+
+
+# --------------------------------------------------------- suppressions
+
+def test_suppression_requires_justification(tmp_path):
+    justified = """
+        def admit(free):
+            # repro-lint: disable=R3 -- fixture demonstrating suppression
+            raise RuntimeError("pool full")
+    """
+    rules, _ = _lint(tmp_path, "src/repro/serving/supp_ok.py", justified)
+    assert rules == []
+
+    unjustified = """
+        def admit(free):
+            raise RuntimeError("pool full")  # repro-lint: disable=R3
+    """
+    rules, report = _lint(tmp_path, "src/repro/serving/supp_bad.py",
+                          unjustified)
+    assert "S0" in rules and "R3" in rules, report.findings
+
+
+# ------------------------------------------------------------ CLI + repo
+
+def test_cli_repo_runs_clean(capsys):
+    """The acceptance gate: `repro-lint src/ --error-on-findings` on the
+    actual repo reports zero findings."""
+    rc = lint_main([str(REPO_SRC), "--error-on-findings"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 findings" in out
+
+
+def test_cli_exit_codes_and_rule_filter(tmp_path, capsys):
+    bad = tmp_path / "src/repro/serving/cli_fixture.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f():\n    raise ValueError('x')\n")
+    assert lint_main([str(bad)]) == 0                   # report-only
+    assert lint_main([str(bad), "--error-on-findings"]) == 1
+    assert lint_main([str(bad), "--error-on-findings", "--rules", "R1"]) == 0
+    assert lint_main([str(bad), "--rules", "R9"]) == 2  # unknown rule
+    assert lint_main(["--list-rules", str(bad)]) == 0
+    assert "trace-safety" in capsys.readouterr().out
+
+
+# ------------------------------------------------------ contract audits
+
+def test_popcount_audit_passes_and_catches_injected_cast():
+    from repro.core.sc_matmul import sc_matmul_reference
+
+    assert contracts.audit_popcount_path() == []
+    a = jnp.zeros((16, 32), jnp.float32)
+    b = jnp.zeros((32, 8), jnp.float32)
+    poisoned = lambda l, r: sc_matmul_reference(
+        l.astype(jnp.bfloat16).astype(jnp.float32), r, bits=8)
+    assert contracts.half_precision_casts(poisoned, a, b), \
+        "an injected bf16 round-trip must be visible to the audit"
+
+
+def test_einsum_parity_audit_passes_and_dims_distinguish_orders():
+    assert contracts.audit_einsum_parity() == []
+    a = jnp.zeros((4, 8), jnp.float32)
+    b = jnp.zeros((8, 4), jnp.float32)
+    d1 = contracts.contraction_dims(
+        lambda x, y: jnp.einsum("ij,jk->ik", x, y), a, b)
+    d2 = contracts.contraction_dims(
+        lambda x, y: jnp.einsum("ij,kj->ik", x, y), a, b.T)
+    assert [d for d, _ in d1] != [d for d, _ in d2], \
+        "dim-order audit must see transposed contractions as different"
+
+
+@pytest.mark.slow
+def test_compile_count_audit_passes():
+    assert contracts.audit_compile_counts() == []
+
+
+@pytest.mark.slow
+def test_compile_count_audit_catches_bound_violation(monkeypatch):
+    import repro.serving as serving
+
+    real = serving.Engine
+
+    class OverBudget(real):
+        def run(self, requests):
+            out = super().run(requests)
+            self.stats["prefill_executables"] = \
+                len(self.stats["buckets"]) + 5
+            return out
+
+    monkeypatch.setattr(serving, "Engine", OverBudget)
+    problems = contracts.audit_compile_counts()
+    assert any("bucket bound" in p for p in problems), problems

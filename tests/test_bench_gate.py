@@ -1,7 +1,8 @@
 """benchmarks.check_regression: baseline matching and the >factor gate."""
 import json
 
-from benchmarks.check_regression import check, compare, find_baseline
+from benchmarks.check_regression import (EXIT_NO_BASELINE, check, compare,
+                                         find_baseline)
 
 
 def _run(backend="cpu", interpret=True, smoke=True, sha="abc", us=1000.0):
@@ -48,13 +49,31 @@ def test_check_never_gates_across_signatures(tmp_path):
     """A latest run whose (backend, interpret, smoke) signature matches no
     earlier run must never gate — comparing a TPU record against a CPU one
     (or compiled against interpret) is meaningless however large the
-    ratio."""
+    ratio — but it must exit EXIT_NO_BASELINE, not pass: the gate checked
+    nothing."""
     path = tmp_path / "traj.json"
     for foreign in (_run(backend="tpu", us=1.0),
                     _run(interpret=False, us=1.0),
                     _run(smoke=False, us=1.0)):
         path.write_text(json.dumps({"runs": [foreign, _run(us=50000.0)]}))
-        assert check(path) == 0, foreign
+        assert check(path) == EXIT_NO_BASELINE, foreign
+
+
+def test_check_no_baseline_is_loud(tmp_path, capsys):
+    """An empty trajectory or a baseline-less latest run used to exit 0 —
+    CI read 'the gate passed' when the gate had compared nothing. Both now
+    exit EXIT_NO_BASELINE with a one-line NO-BASELINE reason on stderr."""
+    path = tmp_path / "traj.json"
+    path.write_text(json.dumps({"runs": []}))
+    assert check(path) == EXIT_NO_BASELINE
+    assert "NO-BASELINE" in capsys.readouterr().err
+
+    path.write_text(json.dumps({"runs": [_run()]}))
+    assert check(path) == EXIT_NO_BASELINE
+    err = capsys.readouterr().err
+    assert "NO-BASELINE" in err and "signature" in err
+    # distinct from the regression/unreadable exit code
+    assert EXIT_NO_BASELINE != 1
 
 
 def test_check_gates_same_signature_across_shas(tmp_path):
@@ -78,5 +97,5 @@ def test_check_end_to_end(tmp_path):
     path.write_text(json.dumps({"runs": [_run(us=1000.0), _run(us=5000.0)]}))
     assert check(path) == 1
     path.write_text(json.dumps({"runs": [_run(us=1000.0)]}))
-    assert check(path) == 0                              # nothing to compare
+    assert check(path) == EXIT_NO_BASELINE               # nothing to compare
     assert check(tmp_path / "missing.json") == 1
