@@ -32,6 +32,16 @@ prompt-bucket set bounds the number of chunked-prefill executables
 (``prefill_executables <= len(buckets)``), so the smoke CI job fails if
 bucketing ever starts compiling per prompt length.
 
+A gate-exempt marker row records the **prefix-cache A/B** (ISSUE 8 /
+DESIGN.md §12): a shared-prefix workload — many requests over two long
+common prompts plus divergent-tail variants — served with the
+copy-on-write prefix cache on and off. The row hard-asserts that both
+serve bit-identical streams (sharing is exact, not approximate, because
+the SC multiplier is deterministic), that the cache actually shared work
+(``hit_rate > 0``, ``prefill_tokens_saved > 0``, at least one CoW copy
+from the chunk-aligned resume landing mid-page), and that TTFT p50 with
+the cache on is no worse than off — then records both TTFT numbers.
+
 A third, gate-exempt marker row records the **gather-vs-fused decode A/B**
 (ISSUE 5 / DESIGN.md §9): the same paged workload through the PR 4
 gather → decode → commit round-trip and through the fused paged-attention
@@ -135,7 +145,86 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                               max_gen))
     rows.append(_fused_row(cfg, params, mesh, n, capacity, prompt_len,
                            max_gen))
+    rows.append(_prefix_row(cfg, params, mesh, n, capacity, prompt_len,
+                            max_gen))
     return rows
+
+
+def _prefix_row(cfg, params, mesh, n: int, capacity: int, prompt_len: int,
+                max_gen: int) -> dict:
+    """Prefix-cache A/B marker (gate-exempt): the workload the cache exists
+    for — ``n`` requests over two long common prompts (plus divergent-tail
+    variants), so most admissions can attach already-computed prompt pages
+    instead of re-prefilling. ``block > chunk`` puts the chunk-aligned
+    resume point mid-page on full-prompt hits, forcing the copy-on-write
+    path into the measurement. Hard-asserted: streams bit-identical cache
+    on vs off, work actually shared, and TTFT p50 no worse with the cache
+    on (it should be far better — hits prefill one chunk, misses eight).
+    Timed on the second run of each mode (first pays XLA compilation)."""
+    from repro.serving import Engine, Request
+
+    plen = 4 * prompt_len                # long prompts: sharing is the win
+    chunk = max(prompt_len // 2, 4)
+    block = prompt_len                   # block > chunk => mid-page resume
+    max_seq = plen + max_gen
+    gen = max(max_gen // 2, 1)
+
+    def shaped(s):
+        return (s, cfg.n_codebooks) if cfg.n_codebooks else (s,)
+
+    base_rng = np.random.default_rng(13)
+    bases = [base_rng.integers(0, cfg.vocab_size, size=shaped(plen),
+                               dtype=np.int32) for _ in range(2)]
+
+    def requests():
+        rng = np.random.default_rng(17)
+        out = []
+        for i in range(n):
+            base = bases[i % 2]
+            if i % 4 == 3:               # shared head, divergent tail
+                tail = rng.integers(0, cfg.vocab_size,
+                                    size=shaped(plen // 2), dtype=np.int32)
+                prompt = np.concatenate([base[:plen // 2], tail])
+            else:                        # the common prompt, verbatim
+                prompt = base.copy()
+            out.append(Request(uid=f"px-{i}", prompt=prompt,
+                               max_new_tokens=gen))
+        return out
+
+    stats, streams = {}, {}
+    for label, enabled in (("off", False), ("on", True)):
+        for _ in range(2):               # first run compiles, second times
+            engine = Engine(cfg, params, capacity=capacity, max_seq=max_seq,
+                            mesh=mesh, block=block, chunk=chunk,
+                            prefix_cache=enabled)
+            results = engine.run(requests())
+        stats[label] = engine.stats
+        streams[label] = [r.tokens.tolist() for r in results]
+    assert streams["on"] == streams["off"], \
+        "prefix cache changed a token stream vs the cache-off baseline"
+    st = stats["on"]
+    assert st["prefix_cache"] and not stats["off"]["prefix_cache"]
+    assert st["prefix_hit_rate"] > 0, "shared-prefix workload never hit"
+    assert st["prefill_tokens_saved"] > 0, "hits saved no prefill work"
+    assert st["cow_copies"] >= 1, \
+        "mid-page resume never exercised copy-on-write"
+    ttft_on = st["ttft_p50_s"] * 1e3
+    ttft_off = stats["off"]["ttft_p50_s"] * 1e3
+    assert ttft_on <= ttft_off, \
+        (f"prefix cache made TTFT worse: p50 {ttft_on:.1f}ms on vs "
+         f"{ttft_off:.1f}ms off")
+    return {
+        "name": f"serving/prefix_cache/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (f"hit_rate={st['prefix_hit_rate']:.2f}"
+                    f" prefill_tokens_saved={st['prefill_tokens_saved']}"
+                    f" cow_copies={st['cow_copies']}"
+                    f" reclaims={st['prefix_reclaims']}"
+                    f" ttft_p50_ms_on={ttft_on:.1f}"
+                    f" ttft_p50_ms_off={ttft_off:.1f}"
+                    f" prompt_len={plen} block={block} chunk={chunk}"
+                    f" requests={n} capacity={capacity}"),
+    }
 
 
 def _chunked_row(cfg, params, mesh, capacity: int, prompt_len: int,

@@ -20,6 +20,13 @@ structural property of the resulting jaxpr:
   chunked prefill: a mixed-length schedule compiles at most one prefill
   executable per prompt bucket and exactly one decode executable (zero
   decode recompiles after warmup).
+* :func:`audit_cow_protocol` — the prefix-cache sharing contract
+  (DESIGN.md §12): driving a shared-prefix schedule step by step, every
+  live slot's next write page is *writable* (refcount ≤ 1 and not
+  prefix-retained) at every decode step — no write ever lands in a shared
+  page without a preceding copy — refcounts equal the block-table
+  references plus staging pins throughout, the schedule actually
+  exercises sharing (hits and a CoW copy), and the drain leaks nothing.
 
 Run as ``PYTHONPATH=src python -m repro.analysis.contracts`` (CI's
 ``analysis`` job); exit 1 on any violated contract.
@@ -203,12 +210,93 @@ def audit_compile_counts() -> list[str]:
     return problems
 
 
+def audit_cow_protocol() -> list[str]:
+    """A shared-prefix schedule never writes into a refcount>1 (or
+    prefix-retained) page without a preceding copy, and the refcount
+    ledger stays consistent with the block tables + staging pins."""
+    from repro.configs.base import ModelConfig
+    from repro.models import bind
+    from repro.serving import Engine, Request
+
+    cfg = ModelConfig(
+        name="contract-audit-prefix", family="dense", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=128, dtype="float32", q_block=16, kv_block=16,
+        loss_chunk=16, remat=False, use_sc_gemm=True).validate()
+    params = bind(cfg).init_params(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab_size, size=(16,)).astype(np.int32)
+    prompts = [base.copy(), base.copy(),               # identical → CoW
+               np.concatenate([base[:8],               # divergent suffix
+                               rng.integers(0, cfg.vocab_size, size=(6,))
+                               .astype(np.int32)])]
+    requests = [Request(uid=f"cow-{i}", prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+
+    # block > chunk so the chunk-aligned resume lands mid-page and the
+    # aligned full match forces a real paged_copy_page at admission
+    engine = Engine(cfg, params, capacity=2, max_seq=32, block=8, chunk=4)
+    pool = engine.pool
+    for r in requests:
+        engine.queue.submit(r)
+
+    problems: list[str] = []
+
+    def check_step(step_ix: int) -> None:
+        refs = np.zeros(pool.n_blocks, np.int64)
+        for slot in pool.entries:
+            live = pool.tables[slot][pool.tables[slot] >= 0]
+            np.add.at(refs, live, 1)
+        st = engine._staging
+        if st is not None and st.match is not None:
+            np.add.at(refs, np.asarray(st.match.pages), 1)
+        if not np.array_equal(refs, pool.refcount):
+            problems.append(
+                f"cow protocol: step {step_ix}: refcount ledger "
+                f"{pool.refcount.tolist()} != table references + pins "
+                f"{refs.tolist()}")
+        for slot, entry in pool.entries.items():
+            page = int(pool.tables[slot, entry.next_write_pos // pool.block])
+            if page >= 0 and not pool.writable(page):
+                problems.append(
+                    f"cow protocol: step {step_ix}: slot {slot} "
+                    f"({entry.request.uid!r}) would write page {page} with "
+                    f"refcount {int(pool.refcount[page])} "
+                    f"(retained={page in pool.retained}) without a copy")
+
+    step_ix = 0
+    check_step(step_ix)
+    while engine.step():
+        step_ix += 1
+        check_step(step_ix)
+
+    if engine._n_prefix_hits < 2:
+        problems.append(
+            f"cow protocol: schedule produced {engine._n_prefix_hits} "
+            f"prefix hits — the audit never exercised sharing")
+    if pool.n_cow < 1:
+        problems.append(
+            "cow protocol: schedule produced no CoW copy — the aligned "
+            "full match must copy the resume page at admission")
+    if (pool.refcount != 0).any():
+        problems.append(
+            f"cow protocol: drained pool leaks references "
+            f"{pool.refcount.tolist()}")
+    if pool.free_pages + len(pool.retained) != pool.n_blocks:
+        problems.append(
+            f"cow protocol: drained pool leaks pages — {pool.free_pages} "
+            f"free + {len(pool.retained)} retained != {pool.n_blocks}")
+    return problems
+
+
 # -------------------------------------------------------------------- main
 
 AUDITS: tuple[tuple[str, Callable[[], list[str]]], ...] = (
     ("popcount-path", audit_popcount_path),
     ("einsum-parity", audit_einsum_parity),
     ("compile-counts", audit_compile_counts),
+    ("cow-protocol", audit_cow_protocol),
 )
 
 

@@ -231,15 +231,20 @@ class TypedBackpressure(Rule):
     """R3: capacity/allocation paths raise typed errors, not bare builtins.
 
     The engine turns ``PoolExhausted`` into wait/preempt scheduling; a bare
-    ``ValueError``/``RuntimeError`` from ``serving/`` or the cache ops
+    ``ValueError``/``RuntimeError`` from ``serving/`` (including the
+    prefix-cache sharing layer, ``serving/prefix.py``) or the cache ops
     is indistinguishable from a crash.  Config mistakes raise
     ``ConfigError``, layout-contract breaks ``CacheLayoutError``, engine
-    bugs ``EngineInvariantError`` (all in ``repro.errors``).
+    bugs ``EngineInvariantError``, sharing-protocol breaks
+    ``PrefixCacheInvariantError`` (all in ``repro.errors``).
     """
 
     id = "R3"
     name = "typed-backpressure"
-    scope = ("repro/serving/", "repro/models/cache_ops.py")
+    # serving/ substring-covers serving/prefix.py; it is named explicitly
+    # because the CoW/refcount protocol is the newest surface R3 guards.
+    scope = ("repro/serving/", "repro/serving/prefix.py",
+             "repro/models/cache_ops.py")
 
     _BARE = {"ValueError", "RuntimeError", "Exception"}
 
@@ -253,7 +258,7 @@ class TypedBackpressure(Rule):
                         f"bare `{name}` raised on a serving path — use "
                         f"PoolExhausted (capacity) or a typed error from "
                         f"repro.errors (ConfigError / CacheLayoutError / "
-                        f"EngineInvariantError)")
+                        f"EngineInvariantError / PrefixCacheInvariantError)")
 
 
 class CacheKeyCompleteness(Rule):

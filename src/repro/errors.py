@@ -39,3 +39,14 @@ class EngineInvariantError(RuntimeError):
     Signals a bug in the step scheduler (e.g. the engine drained with a
     request still unfinished) rather than a capacity or config problem.
     """
+
+
+class PrefixCacheInvariantError(RuntimeError):
+    """The prefix-cache sharing protocol was violated (DESIGN.md §12).
+
+    Raised when page refcounts go negative, when a retained page is freed
+    or double-registered, or when a write would land in a page with
+    refcount > 1 without a preceding copy-on-write — all bugs in the
+    sharing layer, never capacity (that stays ``PoolExhausted``) and never
+    caller error (that stays :class:`ConfigError`).
+    """

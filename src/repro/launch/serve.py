@@ -123,6 +123,17 @@ def main() -> None:
                          "cfg.ssm_chunk multiple for ssm/hybrid)")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="prefill tokens per engine step (default: one chunk)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="share block-aligned prompt prefixes across "
+                         "requests via the copy-on-write prefix cache over "
+                         "the paged pool (DESIGN.md §12; active for paged + "
+                         "chunked + dense, exact by determinism). "
+                         "--no-prefix-cache disables sharing (the reuse A/B)")
+    ap.add_argument("--prefix-block-hash", type=int, default=0,
+                    help="seed keying the radix tree's chained block hash; "
+                         "streams are invariant to it (matches verify raw "
+                         "tokens), it only permutes tree keys")
     ap.add_argument("--stream", action="store_true",
                     help="drive the engine through per-request token "
                          "callbacks and print an SSE-style event feed as "
@@ -142,14 +153,21 @@ def main() -> None:
     params = m.init_params(jax.random.PRNGKey(0))
 
     rng = np.random.default_rng(1)
-    shape = ((args.prompt_len, cfg.n_codebooks) if cfg.n_codebooks
-             else (args.prompt_len,))
+
+    def tokens(n):
+        shape = (n, cfg.n_codebooks) if cfg.n_codebooks else (n,)
+        return rng.integers(0, cfg.vocab_size, size=shape, dtype=np.int32)
+
+    # Real traffic shares long system/tool preambles; the synthetic
+    # workload mirrors that so the prefix cache has something to share —
+    # every prompt opens with the same first half, then diverges.
+    preamble = tokens(args.prompt_len // 2)
     gens = rng.integers(max(args.gen // 4, 1), args.gen + 1,
                         size=args.requests)
     requests = [
         Request(uid=f"req-{i}",
-                prompt=rng.integers(0, cfg.vocab_size, size=shape,
-                                    dtype=np.int32),
+                prompt=np.concatenate(
+                    [preamble, tokens(args.prompt_len - len(preamble))]),
                 max_new_tokens=int(g), temperature=args.temperature, seed=i)
         for i, g in enumerate(gens)
     ]
@@ -160,7 +178,9 @@ def main() -> None:
                     paged=not args.no_paged, block=args.block,
                     n_blocks=args.pages, fused=not args.no_fused_paged,
                     prefill_mode=args.prefill_mode, chunk=args.chunk,
-                    prefill_budget=args.prefill_budget)
+                    prefill_budget=args.prefill_budget,
+                    prefix_cache=args.prefix_cache,
+                    prefix_hash_seed=args.prefix_block_hash)
     t0 = time.time()
     if args.stream:
         # SSE-style feed: one `data:` line per emitted token, as it lands
@@ -181,6 +201,10 @@ def main() -> None:
     pages = (f", pages peak {st['peak_pages']}/{st['n_blocks']}"
              f" (block {st['block']}, {st['preemptions']} preemptions)"
              if st["layout"] == "paged" else "")
+    if st.get("prefix_cache"):
+        pages += (f", prefix {st['prefix_hits']}/{st['prefix_hits'] + st['prefix_misses']}"
+                  f" hits ({st['prefill_tokens_saved']} prefill tokens "
+                  f"saved, {st['cow_copies']} CoW)")
     print(f"[serve] {st['mode']}/{st['layout']}/{st['prefill_mode']}: "
           f"{st['requests']} requests, "
           f"{st['generated_tokens']} tokens in {dt:.1f}s "

@@ -55,6 +55,7 @@ from repro.errors import CacheLayoutError, ConfigError
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
            "truncate_seq", "paged_init", "paged_gather", "paged_commit",
            "paged_insert", "paged_evict", "paged_read", "paged_token_entry",
+           "paged_copy_page", "paged_zero_pages", "prefix_seed",
            "SLOT_AXIS", "SEQ_FIELDS"]
 
 #: The slot (batch) dimension of every non-``pos`` cache leaf.
@@ -278,35 +279,55 @@ def paged_commit(data: Any, dense: Any, tables: jax.Array, *,
 
 
 def paged_insert(data: Any, single: Any, slot: int,
-                 pages: np.ndarray | list[int], *, block: int) -> Any:
+                 pages: np.ndarray | list[int], *, block: int,
+                 start: int = 0) -> Any:
     """Write a single-sequence (B=1) prefill cache into ``pages`` of the
     paged pool and ``slot`` of the slot leaves.
 
-    ``pages`` must hold ``ceil(S1 / block)`` physical page ids (host ints —
-    page allocation is host-driven); the last page's tail beyond ``S1`` is
-    zero-padded. Returns the new pool pytree.
+    With ``start == 0`` (the default), ``pages`` must hold
+    ``ceil(S1 / block)`` physical page ids (host ints — page allocation is
+    host-driven); the last page's tail beyond ``S1`` is zero-padded.
+
+    ``start > 0`` is the prefix-cache admission path (DESIGN.md §12):
+    ``pages`` then covers only the token span from ``start``'s page onward
+    — positions ``[(start // block) * block, …)`` — and page cells *below*
+    ``start`` keep their existing pool contents. That overlay is what makes
+    copy-on-write admission exact: the page copy supplies the shared rows
+    the staging prefill never computed, and ``single`` supplies everything
+    from the divergence point. Slot leaves and ``pos`` are always taken
+    wholesale from ``single``. Returns the new pool pytree.
     """
     pages = jnp.asarray(np.asarray(pages, np.int32))
     n_pages = int(pages.shape[0])
+    pstart = (start // block) * block
 
     def one(path, pl, sl):
         if _is_pos(path):
             return pl.at[slot].set(jnp.reshape(sl, (-1,))[0])
         if not _is_seq(path):
             _check_rank(pl)
-            start = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) \
+            start_ix = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) \
                 + (jnp.zeros((), jnp.int32),) * (pl.ndim - 2)
-            return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype), start)
+            return jax.lax.dynamic_update_slice(pl, sl.astype(pl.dtype),
+                                                start_ix)
         lead, s1 = sl.shape[0], sl.shape[2]
-        if n_pages * block < s1:
+        if pstart + n_pages * block < s1:
             raise CacheLayoutError(
-                f"{n_pages} pages of {block} tokens cannot hold a "
-                f"{s1}-token prefill cache")
-        x = sl[:, 0]                                      # (lead, S1, *tail)
-        pad = n_pages * block - s1
+                f"{n_pages} pages of {block} tokens at token offset "
+                f"{pstart} cannot hold a {s1}-token prefill cache")
+        x = sl[:, 0, pstart:]                             # (lead, S1', *tail)
+        pad = n_pages * block - x.shape[1]
         if pad:
             x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
         x = x.reshape(lead, n_pages, block, *x.shape[2:])
+        if start > pstart:
+            # overlay: cells below ``start`` keep the pool's current
+            # contents (the CoW copy); cells at/after it take ``single``'s
+            cell = pstart + jnp.arange(n_pages * block).reshape(n_pages,
+                                                                block)
+            keep = (cell < start).reshape((1,) + cell.shape
+                                          + (1,) * (x.ndim - 3))
+            x = jnp.where(keep, pl[:, pages], x.astype(pl.dtype))
         return pl.at[:, pages].set(x.astype(pl.dtype))
 
     return jax.tree_util.tree_map_with_path(one, data, single)
@@ -343,3 +364,76 @@ def paged_read(data: Any, tables: jax.Array, slot: int, *,
     evicted pages / trash garbage otherwise). Test/debug surface — the
     decode path gathers all slots at once."""
     return slot_read(paged_gather(data, tables, block=block), slot)
+
+
+# --------------------------------------------------------------------------
+# Prefix-cache page sharing (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+def paged_copy_page(data: Any, src: int, dst: int) -> Any:
+    """Copy one physical page's sequence cells ``src`` → ``dst``.
+
+    The copy-on-write primitive: before the first write into a shared
+    (refcount > 1 or prefix-retained) page, the pool copies it to a private
+    page and rewrites the slot's block table. Only sequence leaves have
+    page axes; slot leaves and ``pos`` pass through. ``src``/``dst`` are
+    host ints — CoW decisions are host-driven like all page allocation.
+    """
+    def one(path, pl):
+        if _is_pos(path) or not _is_seq(path):
+            return pl
+        return pl.at[:, dst].set(pl[:, src])
+
+    return jax.tree_util.tree_map_with_path(one, data)
+
+
+def paged_zero_pages(data: Any, pages: np.ndarray | list[int]) -> Any:
+    """Zero the sequence cells of ``pages`` (no slot is touched).
+
+    The reclaim half of prefix-retained eviction: a page kept warm for
+    reuse after its last reference dropped is zeroed only when the LRU
+    reclaimer finally hands it back to the free list, preserving the
+    pool-contents-are-a-pure-function-of-live-state argument of
+    :func:`paged_evict`.
+    """
+    pages = np.asarray(pages, np.int32)
+
+    def one(path, pl):
+        if _is_pos(path) or not _is_seq(path) or pages.size == 0:
+            return pl
+        ids = jnp.asarray(pages)
+        return pl.at[:, ids].set(jnp.zeros_like(pl[:, ids]))
+
+    return jax.tree_util.tree_map_with_path(one, data)
+
+
+def prefix_seed(single: Any, data: Any, pages: np.ndarray | list[int], *,
+                block: int, resume: int) -> Any:
+    """Seed a B=1 staging cache's sequence rows ``[0, resume)`` from pool
+    ``pages`` and set its position to ``resume``.
+
+    The prefix-cache hit path for chunked prefill: the staging cache enters
+    the PR 6 carry *mid-prompt* — ``prefill_chunk_step`` reads ``pos`` as
+    the absolute resume offset, so pre-seeded K/V rows below ``resume``
+    stand in for the chunks that are skipped. Rows at/after ``resume``
+    (garbage from the last matched page's tail, clipped to the staging
+    extent) are overwritten by the suffix chunks before any query position
+    reaches them, and causally masked until then. Slot leaves pass through
+    zero-initialised — which is why only the dense family (whole state =
+    K/V + pos) may take this path.
+    """
+    pages = np.asarray(pages, np.int32)
+    ids = jnp.asarray(pages)
+
+    def one(path, sl, dl):
+        if _is_pos(path):
+            return jnp.full_like(sl, resume)
+        if not _is_seq(path) or pages.size == 0:
+            return sl
+        gathered = dl[:, ids]                    # (lead, n, block, *tail)
+        flat = gathered.reshape(dl.shape[0], pages.size * block,
+                                *dl.shape[3:])
+        n_rows = min(pages.size * block, sl.shape[2])
+        return sl.at[:, 0, :n_rows].set(flat[:, :n_rows].astype(sl.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, single, data)

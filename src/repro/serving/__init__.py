@@ -1,12 +1,15 @@
 """Continuous-batching serving: request queue, paged/contiguous slot cache
-pools, and the engine loop driving the mesh-sharded prefill/decode steps
-(DESIGN.md §7–§8)."""
-from repro.errors import ConfigError, EngineInvariantError
+pools, the copy-on-write prefix cache over the paged pool, and the engine
+loop driving the mesh-sharded prefill/decode steps (DESIGN.md §7–§8, §12)."""
+from repro.errors import (ConfigError, EngineInvariantError,
+                          PrefixCacheInvariantError)
 
 from .engine import Engine, default_serving_mesh
+from .prefix import PrefixCache, PrefixMatch
 from .queue import Request, RequestQueue, RequestResult
 from .slots import PagedSlotPool, PoolExhausted, SlotEntry, SlotPool
 
 __all__ = ["Engine", "default_serving_mesh", "Request", "RequestQueue",
            "RequestResult", "SlotEntry", "SlotPool", "PagedSlotPool",
-           "PoolExhausted", "ConfigError", "EngineInvariantError"]
+           "PoolExhausted", "PrefixCache", "PrefixMatch", "ConfigError",
+           "EngineInvariantError", "PrefixCacheInvariantError"]

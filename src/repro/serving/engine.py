@@ -20,8 +20,20 @@ just loops over it.
   uses, so pool page accounting and every PR 4 paging invariant are
   untouched. ``prefill_mode="oneshot"`` keeps the whole-prompt
   ``cached_prefill_step`` admission as the scheduling A/B.
+* *Prefix cache (paged + chunked + dense)*: before staging a prompt, the
+  engine consults a token-hash radix tree (``serving.prefix``, DESIGN.md
+  §12) mapping block-aligned prompt prefixes to pages already resident in
+  the pool. On a hit the matched pages are pinned, the staging cache is
+  *seeded* with their K/V and enters the chunked-prefill carry at the
+  resume offset — only the divergent suffix is computed — and admission
+  attaches the block table to the shared pages (copy-on-write for the
+  page holding the resume point). Sharing is gated to the dense family:
+  ssm/hybrid recurrent state lives in O(1) slot leaves the page pool
+  never captures, so a cached prefix cannot restore it.
 * *Grow (paged only)*: before each decode step, every live slot's next
-  write position must map to an allocated page. Exhaustion preempts
+  write position must map to an allocated page — and be *writable*: a
+  shared or prefix-retained page is copied before the first write lands
+  (``PagedSlotPool.ensure_page``). Exhaustion preempts
   youngest-first — including an in-flight staging prefill, whose request
   is re-queued with its partial progress discarded (determinism makes the
   restarted stream bit-identical).
@@ -60,6 +72,7 @@ from repro.launch.steps import (bucket_for, cached_chunked_prefill_step,
                                 cached_prefill_step, prompt_buckets)
 from repro.models import bind, cache_ops
 
+from .prefix import PrefixCache, PrefixMatch
 from .queue import Request, RequestQueue, RequestResult
 from .slots import PagedSlotPool, PoolExhausted, SlotEntry, SlotPool
 
@@ -85,12 +98,16 @@ class _StagingPrefill:
     """One in-flight chunked prefill: the queue head being committed,
     chunk by chunk, into a B=1 staging cache of ``bucket`` extent. The
     entry's ``prefill_offset`` tracks progress; ``rows`` holds the final
-    chunk's logit row once complete (the first sampled token's source)."""
+    chunk's logit row once complete (the first sampled token's source).
+    ``match`` is the prefix-cache plan when the prompt hit (its pages stay
+    pinned in the pool until admission or preemption); the staging cache
+    was then seeded and progress starts at ``match.resume``."""
     entry: SlotEntry
     bucket: int
     step: Any                    # the cached (bucket, chunk) jitted step
     cache: Any                   # B=1 staging cache, threaded through chunks
     rows: np.ndarray | None = None
+    match: PrefixMatch | None = None
 
     @property
     def done(self) -> bool:
@@ -117,6 +134,13 @@ class Engine:
     ``cfg.ssm_chunk`` multiple for the ssm/hybrid families so SSD chunk
     boundaries align); ``prefill_budget`` caps prefill tokens per engine
     step (default: one chunk).
+
+    ``prefix_cache=True`` (the default) shares block-aligned prompt
+    prefixes across requests through a token-hash radix tree over the
+    paged pool (DESIGN.md §12) — active only where it is exact: paged
+    layout, chunked prefill, dense family (the other families keep
+    recurrent state outside the page pool). ``prefix_hash_seed`` keys the
+    block hash; streams are invariant to it.
     """
 
     def __init__(self, cfg, params, *, capacity: int = 4, max_seq: int = 256,
@@ -124,7 +148,8 @@ class Engine:
                  paged: bool = True, block: int = 64,
                  n_blocks: int | None = None, fused: bool = True,
                  prefill_mode: str = "chunked", chunk: int = 16,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None,
+                 prefix_cache: bool = True, prefix_hash_seed: int = 0):
         cfg.validate()
         if prefill_mode not in ("chunked", "oneshot"):
             raise ConfigError(f"unknown prefill_mode {prefill_mode!r}")
@@ -142,6 +167,7 @@ class Engine:
         self.buckets = prompt_buckets(max_seq, chunk)
         self.mesh = mesh if mesh is not None else default_serving_mesh()
         self._m = bind(cfg)
+        self.prefix: PrefixCache | None = None
 
         if paged:
             # one derivation (PagedSlotPool.plan) shapes both the compiled
@@ -162,6 +188,12 @@ class Engine:
             self.pool: Any = PagedSlotPool(self._m, capacity, max_seq,
                                            block=block, n_blocks=n_blocks,
                                            cache=data)
+            if (prefix_cache and prefill_mode == "chunked"
+                    and cfg.family == "dense"):
+                self.prefix = PrefixCache(block=self.pool.block,
+                                          seed=prefix_hash_seed,
+                                          align=self.chunk)
+                self.pool.prefix = self.prefix
         else:
             self._decode, shardings, _ = cached_decode_step(
                 cfg, self.mesh, batch_size=capacity, seq_len=max_seq)
@@ -187,6 +219,11 @@ class Engine:
         self._prefill_shapes: set[tuple[int, int]] = set()
         self._last_decode_end: float | None = None
         self._max_decode_gap = 0.0
+        self._n_prefix_hits = 0
+        self._n_prefix_misses = 0
+        self._prefill_tokens_saved = 0
+        self._backpressure: dict[str, list[dict]] = {"admission": [],
+                                                     "decode": []}
 
     # ------------------------------------------------------------ plumbing
 
@@ -270,7 +307,13 @@ class Engine:
         build (or reuse) the (bucket, chunk) executable, and zero-init the
         staging cache. The entry is created *now* — its ``admit_index``
         makes the staging prefill the youngest admission for preemption
-        ordering, and ``prefill_offset`` tracks chunk progress."""
+        ordering, and ``prefill_offset`` tracks chunk progress.
+
+        With a prefix cache, the prompt is first matched against the radix
+        tree: on a hit the matched pages are pinned (so the LRU reclaimer
+        cannot surrender them mid-staging), the staging cache is seeded
+        with their K/V rows, and chunk progress starts at the resume
+        offset — the shared span is never recomputed."""
         self.pool.check_fits(req)
         bucket = bucket_for(req.prompt_len, self.buckets)
         step, shardings, _ = cached_chunked_prefill_step(
@@ -281,8 +324,22 @@ class Engine:
         entry = SlotEntry(request=req, admitted_at=0.0, admit_step=self._step,
                           admit_index=self._admit_counter)
         self._admit_counter += 1
+        match = None
+        if self.prefix is not None:
+            plan = self.prefix.match(req.prompt)
+            if plan.hit:
+                match = plan
+                self.pool.pin_pages(plan.pages)
+                cache = cache_ops.prefix_seed(
+                    cache, self.pool.cache, plan.pages,
+                    block=self.pool.block, resume=plan.resume)
+                entry.prefill_offset = plan.resume
+                self._n_prefix_hits += 1
+                self._prefill_tokens_saved += plan.resume
+            else:
+                self._n_prefix_misses += 1
         return _StagingPrefill(entry=entry, bucket=bucket, step=step,
-                               cache=cache)
+                               cache=cache, match=match)
 
     def _prefill_chunk_once(self, st: _StagingPrefill) -> None:
         """Commit one chunk of the staging prompt (the final chunk is
@@ -303,21 +360,37 @@ class Engine:
     def _can_admit_staged(self, st: _StagingPrefill) -> bool:
         if not self.pool.has_free:
             return False
-        return not self.paged or self.pool.can_admit(st.entry.request)
+        if not self.paged:
+            return True
+        shared = len(st.match.shared) if st.match is not None else 0
+        return self.pool.can_admit(st.entry.request, shared=shared)
 
     def _admit_staged(self) -> None:
         """Completed staging prefill → pool admission: truncate the bucket
         padding to the exact prompt extent and insert through the same
         ``slot_insert``/``paged_insert`` path a one-shot prefill takes (so
         page accounting sees the prompt, never the bucket), then sample and
-        emit the first token from the held final-chunk logits."""
+        emit the first token from the held final-chunk logits. A prefix
+        hit admits through ``admit_prefix`` instead (attach + CoW), the
+        CoW source's staging pin is released, and either way the prompt's
+        full pages are registered in the radix tree for future hits."""
         st = self._staging
         self._staging = None
         req = st.entry.request
         single = cache_ops.truncate_seq(st.cache, req.prompt_len)
         st.entry.admitted_at = time.perf_counter()
         st.entry.admit_step = self._step
-        slot = self.pool.admit(st.entry, single)
+        if st.match is not None:
+            slot = self.pool.admit_prefix(st.entry, single, st.match)
+            if st.match.cow_src is not None:
+                self.pool.unpin_pages([st.match.cow_src])
+        else:
+            slot = self.pool.admit(st.entry, single)
+        if self.prefix is not None:
+            full = req.prompt_len // self.pool.block
+            new = self.prefix.insert(req.prompt,
+                                     self.pool.tables[slot, :full].tolist())
+            self.pool.retain_pages(new)
         self._n_prefills += 1
         self._emit(slot, st.entry, self._sample(st.entry, st.rows))
 
@@ -340,6 +413,7 @@ class Engine:
             if not st.done:
                 return                       # budget exhausted mid-prompt
             if not self._can_admit_staged(st):
+                self._note_backpressure("admission", st.entry.request.uid)
                 return                       # hold until slots/pages free
             self._admit_staged()
             if chunks_left <= 0:
@@ -380,13 +454,28 @@ class Engine:
             cands.append((self._staging.entry.admit_index, None))
         _, victim = max(cands, key=lambda t: t[0])
         if victim is None:
-            req = self._staging.entry.request
+            st = self._staging
             self._staging = None
-            self.queue.requeue(req)
+            if st.match is not None:    # release the staging pins
+                self.pool.unpin_pages(st.match.pages)
+            self.queue.requeue(st.entry.request)
         else:
             entry = self.pool.evict(victim)
             self.queue.requeue(entry.request)
         self._n_preemptions += 1
+
+    def _note_backpressure(self, reason: str, uid: str | None,
+                           pages_needed: int | None = None,
+                           pages_free: int | None = None) -> None:
+        """Record a backpressure event for ``run()`` stats; consecutive
+        holds of the same request collapse to one event."""
+        events = self._backpressure[reason]
+        if events and events[-1]["uid"] == uid:
+            return
+        if pages_free is None and self.paged:
+            pages_free = self.pool.free_pages
+        events.append({"uid": uid, "pages_needed": pages_needed,
+                       "pages_free": pages_free})
 
     def _grow_pages(self) -> None:
         """Allocate each live slot's next write page, preempting under
@@ -399,7 +488,9 @@ class Engine:
                 try:
                     self.pool.ensure_page(slot, entry.next_write_pos)
                     break
-                except PoolExhausted:
+                except PoolExhausted as e:
+                    self._note_backpressure(e.reason, e.uid,
+                                            e.pages_needed, e.pages_free)
                     if len(self.pool.entries) <= 1 and self._staging is None:
                         raise   # run() pre-check makes this unreachable
                     self._preempt_youngest()
@@ -454,16 +545,21 @@ class Engine:
             # pre-check via queue.submit) — fail, don't spin
             st = self._staging
             if st is not None and st.done and not self._can_admit_staged(st):
+                self._staging = None
+                if st.match is not None:
+                    self.pool.unpin_pages(st.match.pages)
                 raise PoolExhausted(
                     f"request {st.entry.request.uid!r} cannot be admitted "
                     f"even into an empty pool "
-                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})")
+                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})",
+                    uid=st.entry.request.uid)
             if (self.prefill_mode == "oneshot" and self.queue
                     and not self._may_admit_next()):
                 raise PoolExhausted(
                     f"request {self.queue.peek().uid!r} cannot be admitted "
                     f"even into an empty pool "
-                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})")
+                    f"(n_blocks={getattr(self.pool, 'n_blocks', None)})",
+                    uid=self.queue.peek().uid)
             return self.has_work    # mid-prefill, or gang finished at admit
         rows = self._decode_once()
         for slot in self.pool.active_slots:
@@ -534,6 +630,11 @@ class Engine:
         t0 = time.perf_counter()
         steps0, prefills0 = self._step, self._n_prefills
         chunks0, preempt0 = self._n_prefill_chunks, self._n_preemptions
+        hits0, misses0 = self._n_prefix_hits, self._n_prefix_misses
+        saved0 = self._prefill_tokens_saved
+        cow0 = getattr(self.pool, "n_cow", 0)
+        reclaim0 = getattr(self.pool, "n_reclaimed", 0)
+        self._backpressure = {"admission": [], "decode": []}
         self._last_decode_end = None
         self._max_decode_gap = 0.0
 
@@ -585,7 +686,23 @@ class Engine:
                 "block": self.pool.block,
                 "n_blocks": self.pool.n_blocks,
                 "pages_in_use": self.pool.pages_in_use,
+                "pages_live": self.pool.pages_live,
                 "peak_pages": self.pool.peak_pages,
                 "decode_path": "fused" if self.fused else "gather",
+                "backpressure": self._backpressure,
+            })
+        self.stats["prefix_cache"] = self.prefix is not None
+        if self.prefix is not None:
+            hits = self._n_prefix_hits - hits0
+            misses = self._n_prefix_misses - misses0
+            self.stats.update({
+                "prefix_hits": hits,
+                "prefix_misses": misses,
+                "prefix_hit_rate": hits / max(hits + misses, 1),
+                "prefill_tokens_saved":
+                    self._prefill_tokens_saved - saved0,
+                "cow_copies": self.pool.n_cow - cow0,
+                "prefix_reclaims": self.pool.n_reclaimed - reclaim0,
+                "prefix_retained_pages": len(self.pool.retained),
             })
         return out

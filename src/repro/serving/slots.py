@@ -19,15 +19,31 @@ bounded by **tokens actually in flight**, so a page budget far below
 :class:`PoolExhausted` at decode time into preemption + re-queue instead of
 a crash.
 
+With a :class:`~repro.serving.prefix.PrefixCache` attached (DESIGN.md §12)
+pages become *shared*: the pool keeps a per-page **refcount ledger**, a
+matching request's block table attaches to already-resident pages
+(``admit_prefix``), and the first write into a page with refcount > 1 — or
+into a page the prefix tree retains — goes through copy-on-write
+(``paged_copy_page`` + table rewrite), never in place. Eviction turns into
+decref: a page is zeroed and freed only at refcount 0 *and* unretained;
+retained refcount-0 pages stay warm for future hits until the LRU
+reclaimer (``PrefixCache.reclaim``) surrenders them under page pressure.
+
 Invariants (asserted here, fuzzed in tests/test_paging.py):
 
 * a slot is either free or holds exactly one live request; a page is either
-  free, owned by exactly one slot, or the trash block (never handed out);
-* admission fails loudly (typed :class:`PoolExhausted`) when no slot/pages
-  are free or when ``prompt + max_new`` cannot fit ``max_seq`` — KV families
-  write at absolute positions, so overflow must be impossible;
+  free, referenced by ≥ 1 block table / staging pin, retained warm by the
+  prefix tree, or the trash block (never handed out);
+* admission fails loudly (typed :class:`PoolExhausted`, carrying the
+  requesting ``uid`` and a ``reason``) when no slot/pages are free or when
+  ``prompt + max_new`` cannot fit ``max_seq`` — KV families write at
+  absolute positions, so overflow must be impossible;
+* no page is freed at refcount > 0, no write lands in an unwritable page
+  without a preceding copy, and refcounts never go negative (typed
+  :class:`~repro.errors.PrefixCacheInvariantError` on violation);
 * eviction returns the lowest-index-first reusable slot/pages and zeroes
-  their state, so pool contents stay a pure function of the live requests.
+  their state, so pool contents stay a pure function of the live requests
+  plus the retained prefix set.
 """
 from __future__ import annotations
 
@@ -38,10 +54,11 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from repro.errors import ConfigError
+from repro.errors import ConfigError, PrefixCacheInvariantError
 from repro.models import cache_ops
 from repro.models.cache_ops import slot_evict, slot_insert, slot_read
 
+from .prefix import PrefixCache, PrefixMatch
 from .queue import Request
 
 __all__ = ["SlotPool", "PagedSlotPool", "SlotEntry", "PoolExhausted"]
@@ -52,17 +69,24 @@ class PoolExhausted(RuntimeError):
     never fit the pool. Typed so the engine can distinguish backpressure
     (preempt / re-queue / wait) from genuine errors.
 
-    Page-pressure refusals carry the shortfall as data — ``pages_needed``
-    vs ``pages_free`` at refusal time — so backpressure and preemption logs
-    are actionable without parsing the message (both are ``None`` for
-    refusals that involve no page accounting, e.g. ``max_seq`` overflow or
-    a full slot list)."""
+    Refusals carry attribution as data, so backpressure under refcounted
+    eviction is actionable without parsing the message: ``uid`` is the
+    request the refusal blocks (``None`` when no request is attributable),
+    ``reason`` is ``"admission"`` (prompt pages at admit time) or
+    ``"decode"`` (page growth for a live slot), and page-pressure refusals
+    also carry the shortfall — ``pages_needed`` vs ``pages_free`` at
+    refusal time (both ``None`` for refusals that involve no page
+    accounting, e.g. ``max_seq`` overflow or a full slot list). The engine
+    surfaces the events in ``run()`` stats under ``"backpressure"``."""
 
     def __init__(self, message: str, *, pages_needed: int | None = None,
-                 pages_free: int | None = None):
+                 pages_free: int | None = None, uid: str | None = None,
+                 reason: str = "admission"):
         super().__init__(message)
         self.pages_needed = pages_needed
         self.pages_free = pages_free
+        self.uid = uid
+        self.reason = reason
 
 
 @dataclass
@@ -145,13 +169,14 @@ class SlotPool:
             raise PoolExhausted(
                 f"request {req.uid!r} needs {need} cache positions "
                 f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
-                f"but the pool holds max_seq={self.max_seq}")
+                f"but the pool holds max_seq={self.max_seq}",
+                uid=req.uid)
 
     def admit(self, entry: SlotEntry, single_cache: Any) -> int:
         """Insert a prefilled B=1 cache into the lowest free slot."""
         req = entry.request
         if not self._free:
-            raise PoolExhausted("slot pool is full")
+            raise PoolExhausted("slot pool is full", uid=req.uid)
         self.check_fits(req)
         slot = heapq.heappop(self._free)
         assert slot not in self.entries, "free-list/entries desync"
@@ -232,6 +257,16 @@ class PagedSlotPool:
         heapq.heapify(self._free_pages)
         self.entries: dict[int, SlotEntry] = {}
         self.peak_pages = 0
+        #: Per-page reference ledger: block-table references + staging pins.
+        #: Without a prefix cache attached every page is simply rc 1 while
+        #: owned and rc 0 when free — the PR 4 behaviour, unchanged.
+        self.refcount = np.zeros(self.n_blocks, np.int64)
+        #: Pages the prefix tree keeps warm (never zeroed/freed while here).
+        self.retained: set[int] = set()
+        #: The attached PrefixCache (engine wires it); owns identity + LRU.
+        self.prefix: PrefixCache | None = None
+        self.n_cow = 0
+        self.n_reclaimed = 0
 
     # ------------------------------------------------------------- queries
 
@@ -253,7 +288,26 @@ class PagedSlotPool:
 
     @property
     def pages_in_use(self) -> int:
+        """Pages not on the free list — includes retained warm pages (they
+        hold real memory) as well as live references."""
         return self.n_blocks - len(self._free_pages)
+
+    @property
+    def pages_live(self) -> int:
+        """Pages referenced by at least one block table or staging pin.
+        Drains to 0; ``pages_in_use - pages_live`` is the warm prefix set."""
+        return int((self.refcount > 0).sum())
+
+    def _reclaimable(self) -> int:
+        """Retained warm pages the LRU reclaimer could surrender now."""
+        return sum(1 for p in self.retained if self.refcount[p] == 0)
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages plus reclaimable warm pages — the admission/growth
+        capacity check counts both, so a full warm cache never refuses
+        work it could serve by shrinking itself."""
+        return len(self._free_pages) + self._reclaimable()
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` sequence positions."""
@@ -270,7 +324,7 @@ class PagedSlotPool:
                 n += 1
         return n
 
-    def can_admit(self, req: Request) -> bool:
+    def can_admit(self, req: Request, *, shared: int = 0) -> bool:
         """Slot free and enough pages for the prompt *plus the first decode
         write* (admitting with exactly the prompt's pages would preempt
         itself on the next step whenever ``prompt_len % block == 0``),
@@ -278,25 +332,87 @@ class PagedSlotPool:
         headroom a tight budget admits the queue head, grows an older slot,
         preempts the head again, and burns a full B=1 prefill per ping-pong
         cycle; fully-allocated slots claim none, so a budget with no growth
-        in flight fills every slot."""
+        in flight fills every slot. ``shared`` pages (a prefix-cache match
+        attaching by reference) are already resident and claim nothing
+        new; reclaimable warm pages count as capacity."""
         return (bool(self._free)
-                and self.pages_for(req.prompt_len + 1) + self._growth_pending()
-                <= len(self._free_pages))
+                and self.pages_for(req.prompt_len + 1) - shared
+                + self._growth_pending()
+                <= self.available_pages)
 
     def __len__(self) -> int:
         return len(self.entries)
 
     # ------------------------------------------------------- admit / evict
 
-    def _take_pages(self, n: int) -> list[int]:
+    def _take_pages(self, n: int, *, uid: str | None = None,
+                    reason: str = "admission") -> list[int]:
+        """Pop ``n`` fresh pages (refcount 1), reclaiming LRU warm prefix
+        pages on shortfall; typed refusal with attribution otherwise."""
+        if n > self.available_pages:
+            raise PoolExhausted(
+                f"need {n} pages but only {self.available_pages} of "
+                f"{self.n_blocks} are free or reclaimable",
+                pages_needed=n, pages_free=self.available_pages,
+                uid=uid, reason=reason)
+        if n > len(self._free_pages) and self.prefix is not None:
+            ids = self.prefix.reclaim(n - len(self._free_pages),
+                                      self.refcount)
+            if ids:
+                self.cache = cache_ops.paged_zero_pages(self.cache, ids)
+                self.retained.difference_update(ids)
+                self.n_reclaimed += len(ids)
+                for p in ids:
+                    heapq.heappush(self._free_pages, p)
         if n > len(self._free_pages):
             raise PoolExhausted(
                 f"need {n} pages but only {len(self._free_pages)} of "
-                f"{self.n_blocks} are free",
-                pages_needed=n, pages_free=len(self._free_pages))
+                f"{self.n_blocks} are free after reclaim",
+                pages_needed=n, pages_free=len(self._free_pages),
+                uid=uid, reason=reason)
         pages = [heapq.heappop(self._free_pages) for _ in range(n)]
+        self.refcount[pages] = 1
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return pages
+
+    def _release_page(self, page: int) -> None:
+        """Drop one reference; zero + free at refcount 0 unless the prefix
+        tree retains the page warm."""
+        self.refcount[page] -= 1
+        if self.refcount[page] < 0:
+            raise PrefixCacheInvariantError(
+                f"page {page} refcount went negative")
+        if self.refcount[page] == 0 and page not in self.retained:
+            self.cache = cache_ops.paged_zero_pages(self.cache, [page])
+            heapq.heappush(self._free_pages, int(page))
+
+    # --------------------------------------------------- prefix refcounting
+
+    def pin_pages(self, pages) -> None:
+        """Take a staging reference on matched pages (engine, at prefill
+        start) so the LRU reclaimer cannot surrender them before the
+        request admits; released by admission (the block-table reference
+        replaces the pin) or by staging preemption."""
+        for p in pages:
+            self.refcount[p] += 1
+
+    def unpin_pages(self, pages) -> None:
+        for p in pages:
+            self._release_page(int(p))
+
+    def retain_pages(self, pages) -> None:
+        """Mark pages the prefix tree just registered as retained warm."""
+        for p in pages:
+            if self.refcount[p] <= 0:
+                raise PrefixCacheInvariantError(
+                    f"page {p} retained while unreferenced")
+            self.retained.add(int(p))
+
+    def writable(self, page: int) -> bool:
+        """May a slot write into ``page`` in place? Only when this slot is
+        the sole reference *and* the prefix tree does not retain it — a
+        retained page backs future hits even at refcount 1."""
+        return self.refcount[page] <= 1 and page not in self.retained
 
     def check_fits(self, req: Request) -> None:
         """Raise :class:`PoolExhausted` if ``req`` can *never* fit: over
@@ -307,14 +423,15 @@ class PagedSlotPool:
             raise PoolExhausted(
                 f"request {req.uid!r} needs {need} cache positions "
                 f"(prompt {req.prompt_len} + max_new {req.max_new_tokens}) "
-                f"but the pool holds max_seq={self.max_seq}")
+                f"but the pool holds max_seq={self.max_seq}",
+                uid=req.uid)
         if self.pages_for(need) > self.n_blocks:
             raise PoolExhausted(
                 f"request {req.uid!r} needs {self.pages_for(need)} pages "
                 f"of {self.block} tokens but the page budget is "
                 f"n_blocks={self.n_blocks}",
                 pages_needed=self.pages_for(need),
-                pages_free=len(self._free_pages))
+                pages_free=len(self._free_pages), uid=req.uid)
 
     def admit(self, entry: SlotEntry, single_cache: Any) -> int:
         """Reserve the prompt's pages and insert a prefilled B=1 cache into
@@ -323,9 +440,10 @@ class PagedSlotPool:
         (:meth:`ensure_page`)."""
         req = entry.request
         if not self._free:
-            raise PoolExhausted("slot pool is full")
+            raise PoolExhausted("slot pool is full", uid=req.uid)
         self.check_fits(req)
-        pages = self._take_pages(self.pages_for(req.prompt_len))
+        pages = self._take_pages(self.pages_for(req.prompt_len),
+                                 uid=req.uid)
         slot = heapq.heappop(self._free)
         assert slot not in self.entries, "free-list/entries desync"
         self.tables[slot, :len(pages)] = pages
@@ -334,28 +452,87 @@ class PagedSlotPool:
         self.entries[slot] = entry
         return slot
 
+    def admit_prefix(self, entry: SlotEntry, single_cache: Any,
+                     match: PrefixMatch) -> int:
+        """Prefix-hit admission (DESIGN.md §12): attach ``match.shared``
+        pages by reference (their staging pins become this slot's
+        block-table references — no refcount change), copy
+        ``match.cow_src`` into a private page when the resume point falls
+        inside it, and insert the suffix prefill from token
+        ``match.resume`` with the overlay keeping copied rows below it.
+        The engine still holds the pin on ``cow_src``; it releases it
+        after this returns."""
+        req = entry.request
+        if not self._free:
+            raise PoolExhausted("slot pool is full", uid=req.uid)
+        self.check_fits(req)
+        shared = [int(p) for p in match.shared]
+        n_total = self.pages_for(req.prompt_len)
+        fresh = self._take_pages(n_total - len(shared), uid=req.uid)
+        slot = heapq.heappop(self._free)
+        assert slot not in self.entries, "free-list/entries desync"
+        self.tables[slot, :n_total] = shared + fresh
+        if match.cow_src is not None:
+            if not fresh:
+                raise PrefixCacheInvariantError(
+                    f"request {req.uid!r}: CoW admission took no private "
+                    f"page for the resume point")
+            self.cache = cache_ops.paged_copy_page(self.cache,
+                                                   match.cow_src, fresh[0])
+            self.n_cow += 1
+        self.cache = cache_ops.paged_insert(self.cache, single_cache, slot,
+                                            fresh, block=self.block,
+                                            start=match.resume)
+        self.entries[slot] = entry
+        return slot
+
     def ensure_page(self, slot: int, write_pos: int) -> None:
         """Guarantee the page covering ``write_pos`` is allocated for
-        ``slot`` before a decode step writes there. Raises
-        :class:`PoolExhausted` when the free list is empty — the engine's
-        cue to preempt a slot and re-queue its request."""
+        ``slot`` — and *writable* — before a decode step writes there.
+        An allocated but shared/retained page is copied first (CoW): the
+        decode scatter never lands in a page another request or the warm
+        prefix set can see. Raises :class:`PoolExhausted` when the free
+        list is empty — the engine's cue to preempt a slot and re-queue
+        its request."""
+        entry = self.entries.get(slot)
+        uid = entry.request.uid if entry is not None else None
         index = write_pos // self.block
         if index >= self.max_blocks:
             raise PoolExhausted(
                 f"slot {slot} write position {write_pos} exceeds "
-                f"max_seq={self.max_seq}")
-        if self.tables[slot, index] >= 0:
+                f"max_seq={self.max_seq}", uid=uid, reason="decode")
+        page = int(self.tables[slot, index])
+        if page >= 0:
+            if self.writable(page):
+                return
+            private = self._take_pages(1, uid=uid, reason="decode")[0]
+            self.cache = cache_ops.paged_copy_page(self.cache, page,
+                                                   private)
+            self.tables[slot, index] = private
+            self._release_page(page)
+            self.n_cow += 1
             return
-        self.tables[slot, index] = self._take_pages(1)[0]
+        self.tables[slot, index] = self._take_pages(1, uid=uid,
+                                                    reason="decode")[0]
 
     def evict(self, slot: int) -> SlotEntry:
-        """Free ``slot`` and its pages, zeroing their device state; returns
-        its entry."""
+        """Release ``slot``'s references; zero and free what nothing else
+        holds. Under prefix sharing eviction is a decref, not a free: a
+        page still referenced by another slot survives untouched, and a
+        refcount-0 page the prefix tree retains stays *warm* (contents
+        intact, off the free list) until the LRU reclaimer surrenders it.
+        Slot leaves and ``pos`` are always zeroed; returns the entry."""
         entry = self.entries.pop(slot)
         pages = self.tables[slot][self.tables[slot] >= 0]
-        self.cache = cache_ops.paged_evict(self.cache, slot, pages)
+        self.refcount[pages] -= 1
+        if (self.refcount[pages] < 0).any():
+            raise PrefixCacheInvariantError(
+                f"slot {slot} eviction drove a page refcount negative")
+        freed = [int(p) for p in pages.tolist()
+                 if self.refcount[p] == 0 and p not in self.retained]
+        self.cache = cache_ops.paged_evict(self.cache, slot, freed)
         self.tables[slot, :] = -1
-        for p in pages.tolist():
+        for p in freed:
             heapq.heappush(self._free_pages, p)
         heapq.heappush(self._free, slot)
         return entry

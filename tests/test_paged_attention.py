@@ -322,7 +322,10 @@ def _streams_match_baseline(cfg, *, capacity, block, n_blocks, plens, gens,
             err_msg=(f"{cfg.name} paged_attn={cfg.paged_attn_kernel} "
                      f"fused={fused} capacity={capacity} block={block} "
                      f"n_blocks={n_blocks}"))
-    assert engine.pool.pages_in_use == 0
+    # drained: no live references (prefix-warm pages may remain resident)
+    assert engine.pool.pages_live == 0
+    assert (engine.pool.free_pages + len(engine.pool.retained)
+            == engine.pool.n_blocks)
     return engine
 
 

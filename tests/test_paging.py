@@ -27,8 +27,9 @@ from _propcheck import given, settings, st
 from repro.configs.base import ModelConfig
 from repro.launch.serve import generate
 from repro.models import bind
-from repro.serving import (Engine, PagedSlotPool, PoolExhausted, Request,
-                           SlotEntry, SlotPool)
+from repro.serving import (Engine, PagedSlotPool, PoolExhausted, PrefixCache,
+                           PrefixCacheInvariantError, Request, SlotEntry,
+                           SlotPool)
 
 
 def _cfg(family, **kw):
@@ -85,7 +86,10 @@ def test_pool_exhausted_is_typed_backpressure():
     catch — a RuntimeError subclass, so untyped callers still fail loud.
     Page-budget refusals carry machine-readable ``pages_needed`` /
     ``pages_free`` (schedulers decide from numbers, not message parsing);
-    non-page refusals leave both ``None``."""
+    non-page refusals leave both ``None``. Every refusal names *which*
+    request hit the wall (``uid``) and *where* (``reason``: admission vs
+    decode-time growth) — ``Engine.run()`` stats surface the events under
+    ``"backpressure"`` keyed by that reason."""
     assert issubclass(PoolExhausted, RuntimeError)
     cfg = CASES[0]
     m = bind(cfg)
@@ -96,6 +100,7 @@ def test_pool_exhausted_is_typed_backpressure():
     with pytest.raises(PoolExhausted, match="full") as exc:
         contiguous.admit(_entry("b"), single)
     assert exc.value.pages_needed is None and exc.value.pages_free is None
+    assert exc.value.uid == "b" and exc.value.reason == "admission"
 
     paged = PagedSlotPool(m, capacity=2, max_seq=16, block=4, n_blocks=2)
     paged.admit(_entry("c", prompt_len=4, gen=2), single)      # 1 page
@@ -104,17 +109,21 @@ def test_pool_exhausted_is_typed_backpressure():
                     _fake_single(m, 8))                        # needs 2
     assert exc.value.pages_needed == 3     # ceil((8 prompt + 2 gen) / 4)
     assert exc.value.pages_free == 1
-    # decode-time growth hits the same typed refusal when the pool is dry
+    assert exc.value.uid == "d" and exc.value.reason == "admission"
+    # decode-time growth hits the same typed refusal when the pool is dry,
+    # attributed to the *growing* request and reason="decode"
     paged.admit(_entry("e", prompt_len=4, gen=2), single)
     with pytest.raises(PoolExhausted) as exc:
         paged.ensure_page(0, 4)                                # page 1 of 'c'
     assert exc.value.pages_needed == 1 and exc.value.pages_free == 0
+    assert exc.value.uid == "c" and exc.value.reason == "decode"
     # ...and over-length growth is refused even with pages free
     roomy = PagedSlotPool(m, capacity=1, max_seq=8, block=4)
     roomy.admit(_entry("f", prompt_len=4, gen=2), single)
     with pytest.raises(PoolExhausted, match="max_seq") as exc:
         roomy.ensure_page(0, 8)
     assert exc.value.pages_needed is None and exc.value.pages_free is None
+    assert exc.value.uid == "f" and exc.value.reason == "decode"
 
 
 # ------------------------------------------------------------ round-trip
@@ -166,9 +175,16 @@ def _check_invariants(pool: PagedSlotPool):
     owned = [p for row in pool.tables for p in row[row >= 0].tolist()]
     assert len(owned) == len(set(owned)), "page double-owned"
     assert not (free & set(owned)), "page both free and owned"
-    assert free | set(owned) == set(range(pool.n_blocks)), \
+    warm = {p for p in pool.retained if pool.refcount[p] == 0}
+    assert not (free & warm), "warm retained page left on the free list"
+    assert free | set(owned) | warm == set(range(pool.n_blocks)), \
         "page leaked (trash block must never be handed out)"
-    assert pool.pages_in_use == len(owned)
+    assert pool.pages_in_use == len(owned) + len(warm)
+    # the refcount ledger mirrors the block tables exactly (no pins here)
+    refs = np.zeros(pool.n_blocks, np.int64)
+    if owned:
+        np.add.at(refs, owned, 1)
+    assert (pool.refcount == refs).all(), "refcount ledger desync"
     live_rows = set(pool.entries)
     for slot in range(pool.capacity):
         row = pool.tables[slot]
@@ -176,6 +192,34 @@ def _check_invariants(pool: PagedSlotPool):
             assert (row == -1).all(), "free slot kept pages"
         else:
             assert (row >= 0).any(), "live slot owns no pages"
+
+
+def _assert_drained(pool: PagedSlotPool):
+    """Post-drain refcount invariants (DESIGN.md §12): no live references,
+    no negative refcounts, and every page is either free or a warm
+    (refcount-0) page the prefix tree retains — i.e. nothing leaked."""
+    assert pool.pages_live == 0
+    assert (pool.refcount >= 0).all()
+    assert pool.free_pages + len(pool.retained) == pool.n_blocks
+    for p in pool.retained:
+        assert pool.refcount[p] == 0, "retained page still referenced"
+
+
+def _assert_refcount_ledger(engine):
+    """Mid-run ledger check: the pool's refcounts equal block-table
+    references plus the staging prefill's pinned prefix pages — nothing
+    else may hold a reference, and none may go negative."""
+    pool = engine.pool
+    refs = np.zeros(pool.n_blocks, np.int64)
+    for row in pool.tables:
+        pages = row[row >= 0]
+        if pages.size:
+            np.add.at(refs, pages, 1)
+    staging = engine._staging
+    if staging is not None and staging.match is not None:
+        np.add.at(refs, np.asarray(staging.match.pages, int), 1)
+    assert (pool.refcount == refs).all(), "refcount ledger desync"
+    assert (pool.refcount >= 0).all()
 
 
 @settings(max_examples=30, deadline=None)
@@ -237,7 +281,14 @@ def test_engine_requeues_on_decode_time_exhaustion(dense_params):
     for res, ref in zip(results, baseline):
         np.testing.assert_array_equal(res.tokens, ref, err_msg=res.uid)
     assert not engine.queue and not engine.pool.entries
-    assert engine.pool.pages_in_use == 0
+    _assert_drained(engine.pool)
+    # the exhaustion that forced preemption is attributed in run() stats:
+    # decode-time events name the growing request and the shortfall
+    decode_events = engine.stats["backpressure"]["decode"]
+    assert decode_events, "decode-time exhaustion left no backpressure event"
+    for ev in decode_events:
+        assert set(ev) == {"uid", "pages_needed", "pages_free"}
+        assert ev["uid"] in {"r0", "r1"}
 
 
 def test_paged_pool_admits_what_contiguous_cannot(dense_params):
@@ -306,7 +357,7 @@ def _assert_paged_matches_sequential(data, families):
             res.tokens, ref,
             err_msg=(f"{cfg.name}: capacity={capacity} block={block} "
                      f"n_blocks={n_blocks} plens={plens} gens={gens}"))
-    assert engine.pool.pages_in_use == 0         # fully drained
+    _assert_drained(engine.pool)
 
 
 @settings(max_examples=4, deadline=None)
@@ -325,3 +376,251 @@ def test_paged_streams_bit_identical_fuzz_deep(data):
     """The long sweep (scheduled CI / `pytest -m slow`): all three families,
     more schedules, tight and roomy page budgets."""
     _assert_paged_matches_sequential(data, CASES)
+
+
+# ----------------------------------------------- prefix cache (DESIGN §12)
+
+def test_prefix_tree_match_insert_reclaim():
+    """Pure radix-tree bookkeeping: match plans, registration, protocol
+    violations, and LRU reclaim order — no model, no pool."""
+    tree = PrefixCache(block=4, align=1)
+    prompt = np.arange(8, dtype=np.int32)
+    assert not tree.match(prompt).hit                # cold tree misses
+    assert tree.insert(prompt, [5, 9]) == [5, 9]
+    assert tree.owns(5) and tree.owns(9) and len(tree) == 2
+    m = tree.match(prompt)
+    # resume caps at prompt_len - 1 = 7: the final token's chunk is always
+    # recomputed, so page 9 (holding position 7) is the CoW source
+    assert m.hit and m.resume == 7 and m.pages == (5, 9)
+    assert m.shared == (5,) and m.cow_src == 9
+    # a longer prompt extending the resident prefix resumes page-aligned:
+    # both pages attach by reference, nothing is copied
+    longer = np.concatenate([prompt, np.arange(100, 104, dtype=np.int32)])
+    m2 = tree.match(longer)
+    assert m2.resume == 8 and m2.shared == (5, 9) and m2.cow_src is None
+    # divergence in the first block is a clean miss, not a partial hit
+    other = prompt.copy()
+    other[0] ^= 1
+    assert not tree.match(other).hit
+    # registering one physical page under two prefixes is a violation...
+    with pytest.raises(PrefixCacheInvariantError, match="two prefixes"):
+        tree.insert(np.arange(50, 54, dtype=np.int32), [5])
+    # ...as is a page list that does not tile the prompt
+    with pytest.raises(PrefixCacheInvariantError, match="got 3 pages"):
+        tree.insert(prompt, [1, 2, 3])
+    # re-inserting resident content retains nothing new (the duplicate
+    # pages stay private to their slot)
+    assert tree.insert(prompt, [7, 8]) == []
+    # reclaim surrenders idle leaves only — never an interior node while
+    # its extension is resident — and frees the parent once the leaf goes
+    refcount = np.zeros(16, np.int64)
+    assert tree.reclaim(1, refcount) == [9]
+    assert tree.reclaim(4, refcount) == [5]
+    assert len(tree) == 0
+
+
+def test_prefix_match_resume_is_chunk_aligned():
+    """The chunked-prefill step scatters whole chunks at the staging
+    offset, so resume offsets must round *down* to a chunk multiple; when
+    that lands mid-page the page becomes the CoW source."""
+    tree = PrefixCache(block=8, align=4)
+    prompt = np.arange(16, dtype=np.int32)
+    tree.insert(prompt, [0, 1])
+    m = tree.match(prompt)
+    # cap = 15 rounds down to 12 — inside page 1, which must be copied
+    assert m.resume == 12 and m.pages == (0, 1)
+    assert m.shared == (0,) and m.cow_src == 1
+    aligned = PrefixCache(block=4, align=4)
+    aligned.insert(prompt[:4], [3])
+    m2 = aligned.match(prompt[:5])
+    assert m2.resume == 4 and m2.shared == (3,) and m2.cow_src is None
+    # an exactly-one-block prompt still recomputes its final token's
+    # chunk, which rounds resume to zero: a miss, never a stale logit
+    assert not aligned.match(prompt[:4]).hit
+
+
+def test_prefix_hash_seed_only_permutes_keys():
+    """The hash seed keys the radix digests, nothing else: match plans are
+    identical across seeds because matching verifies raw tokens."""
+    prompt = np.arange(12, dtype=np.int32)
+    trees = [PrefixCache(block=4, seed=s, align=4) for s in (0, 7, -3)]
+    for tree in trees:
+        tree.insert(prompt, [0, 1, 2])
+    plans = [tree.match(prompt) for tree in trees]
+    assert plans[0] == plans[1] == plans[2]
+
+
+def test_prefix_cache_gating(dense_params):
+    """The cache engages only where sharing is sound: paged + chunked +
+    dense (ssm/hybrid recurrent state is slot-scoped and cannot be
+    recovered from K/V pages)."""
+    cfg = CASES[0]
+    on = Engine(cfg, dense_params, capacity=2, max_seq=16, block=4, chunk=4)
+    assert on.prefix is not None and on.pool.prefix is on.prefix
+    off = Engine(cfg, dense_params, capacity=2, max_seq=16, block=4,
+                 chunk=4, prefix_cache=False)
+    assert off.prefix is None
+    oneshot = Engine(cfg, dense_params, capacity=2, max_seq=16, block=4,
+                     prefill_mode="oneshot")
+    assert oneshot.prefix is None
+    contiguous = Engine(cfg, dense_params, capacity=2, max_seq=16,
+                        paged=False)
+    assert contiguous.prefix is None
+    ssm_cfg = CASES[1]
+    ssm = Engine(ssm_cfg, _params(ssm_cfg), capacity=2, max_seq=16,
+                 block=4, chunk=4)
+    assert ssm.prefix is None
+
+
+def test_prefix_cache_shared_prompts_bit_identical(dense_params):
+    """Shared prompts through the warm engine: streams stay bit-identical
+    to the sequential baseline while prefill work is skipped, and a second
+    run over the warm tree hits on every request."""
+    cfg = CASES[0]
+    params = dense_params
+    base = _prompt(cfg, 16, seed=21)
+    prompts = [base, base.copy(),
+               np.concatenate([base[:8], _prompt(cfg, 8, seed=22)])]
+    gens = [4, 3, 4]
+    baseline = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                    gen_tokens=g))[0]
+                for p, g in zip(prompts, gens)]
+
+    engine = Engine(cfg, params, capacity=2, max_seq=32, block=4, chunk=4)
+    results = engine.run([Request(uid=f"p{i}", prompt=p, max_new_tokens=g)
+                          for i, (p, g) in enumerate(zip(prompts, gens))])
+    for res, ref in zip(results, baseline):
+        np.testing.assert_array_equal(res.tokens, ref, err_msg=res.uid)
+    st = engine.stats
+    assert st["prefix_cache"] and st["prefix_hits"] >= 1
+    assert st["prefill_tokens_saved"] > 0 and st["prefix_hit_rate"] > 0
+    _assert_drained(engine.pool)
+    # the drained pool keeps the prefix warm: pages in use but none live
+    assert engine.pool.pages_in_use > 0 and len(engine.pool.retained) > 0
+
+    rerun = engine.run([Request(uid=f"q{i}", prompt=p, max_new_tokens=g)
+                        for i, (p, g) in enumerate(zip(prompts, gens))])
+    for res, ref in zip(rerun, baseline):
+        np.testing.assert_array_equal(res.tokens, ref, err_msg=res.uid)
+    st2 = engine.stats
+    assert st2["prefix_hits"] == len(prompts) and st2["prefix_misses"] == 0
+    assert st2["prefill_tokens_saved"] >= st["prefill_tokens_saved"]
+    _assert_drained(engine.pool)
+
+
+def test_prefix_cow_preserves_bit_identity(dense_params):
+    """block > chunk forces the chunk-aligned resume mid-page, so
+    admission must copy-on-write the straddled page; the suffix prefill
+    then overwrites only rows above the resume point."""
+    cfg = CASES[0]
+    params = dense_params
+    prompt = _prompt(cfg, 16, seed=31)
+    gens = [3, 5]
+    baseline = [np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                                    gen_tokens=g))[0] for g in gens]
+    engine = Engine(cfg, params, capacity=2, max_seq=32, block=8, chunk=4)
+    results = engine.run([Request(uid=f"c{i}", prompt=prompt,
+                                  max_new_tokens=g)
+                          for i, g in enumerate(gens)])
+    assert engine.stats["cow_copies"] >= 1
+    assert engine.stats["prefix_hits"] >= 1
+    for res, ref in zip(results, baseline):
+        np.testing.assert_array_equal(res.tokens, ref, err_msg=res.uid)
+    _assert_drained(engine.pool)
+
+
+def test_prefix_hash_seed_stream_invariance(dense_params):
+    """Engine streams and hit counts are invariant to the radix hash seed
+    (serve.py --prefix-block-hash): the seed permutes tree keys only."""
+    cfg = CASES[0]
+    base = _prompt(cfg, 16, seed=41)
+    prompts = [base, base.copy()]
+    outs, hits = [], []
+    for seed in (0, 123456789):
+        engine = Engine(cfg, dense_params, capacity=2, max_seq=32, block=4,
+                        chunk=4, prefix_hash_seed=seed)
+        results = engine.run([
+            Request(uid=f"h{i}", prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)])
+        outs.append([r.tokens for r in results])
+        hits.append(engine.stats["prefix_hits"])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+    assert hits[0] == hits[1] >= 1
+
+
+# --------------------------------------- shared-prefix schedule property
+
+def _shared_prefix_case(data, families):
+    """A schedule built to exercise sharing: many requests over few long
+    common prompts, divergent suffixes, and (optionally) a page budget
+    tight enough to force preemption + LRU reclaim of warm pages."""
+    cfg = data.draw(st.sampled_from(families), "family")
+    block = data.draw(st.sampled_from([2, 4]), "block")
+    capacity = data.draw(st.integers(1, 2), "capacity")
+    n_req = data.draw(st.integers(3, 4), "n_req")
+    max_seq = 32
+    rng = np.random.default_rng(data.draw(st.integers(0, 3), "base_seed"))
+    base = rng.integers(0, cfg.vocab_size, size=(12,)).astype(np.int32)
+    prompts, gens = [], []
+    for i in range(n_req):
+        shape = data.draw(st.sampled_from(["full", "full", "short", "div"]),
+                          f"shape{i}")
+        if shape == "full":          # the whole common prompt, verbatim
+            prompt = base.copy()
+        elif shape == "short":       # a block-aligned ancestor prefix
+            prompt = base[:8].copy()
+        else:                        # shared head, divergent tail
+            tail = rng.integers(0, cfg.vocab_size, size=(4,))
+            prompt = np.concatenate([base[:8], tail]).astype(np.int32)
+        prompts.append(prompt)
+        gens.append(data.draw(st.integers(1, 4), f"gen{i}"))
+    full = capacity * (max_seq // block)
+    tight = max(-(-max(len(p) + g for p, g in zip(prompts, gens)) // block),
+                2)
+    n_blocks = tight if data.draw(st.sampled_from([0, 1]), "tight") else full
+    return cfg, block, capacity, prompts, gens, max_seq, n_blocks
+
+
+def _assert_shared_prefix_schedule(data, families):
+    cfg, block, capacity, prompts, gens, max_seq, n_blocks = \
+        _shared_prefix_case(data, families)
+    params = _params(cfg)
+    baseline = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                    gen_tokens=g))[0]
+                for p, g in zip(prompts, gens)]
+    engine = Engine(cfg, params, capacity=capacity, max_seq=max_seq,
+                    block=block, n_blocks=n_blocks, chunk=4)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        engine.submit(Request(uid=f"r{i}", prompt=p, max_new_tokens=g))
+    while engine.step():
+        _assert_refcount_ledger(engine)      # no page freed at refcount>0
+    results = engine.run([])                 # collect + populate stats
+    by_uid = {r.uid: r for r in results}
+    for i, ref in enumerate(baseline):
+        np.testing.assert_array_equal(
+            by_uid[f"r{i}"].tokens, ref,
+            err_msg=(f"{cfg.name}: capacity={capacity} block={block} "
+                     f"n_blocks={n_blocks} "
+                     f"plens={[len(p) for p in prompts]} gens={gens}"))
+    _assert_drained(engine.pool)             # no leak at drain
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.data())
+def test_shared_prefix_streams_bit_identical_fuzz(data):
+    """Shared-prefix schedules (the workload the cache exists for) stay
+    bit-identical to the sequential baseline across all three families —
+    dense shares pages, ssm/hybrid must be transparently unaffected —
+    with refcount bookkeeping checked at every engine step."""
+    _assert_shared_prefix_schedule(data, CASES)
+
+
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_shared_prefix_streams_bit_identical_fuzz_deep(data):
+    """The deep shared-prefix sweep (scheduled CI / `pytest -m slow`):
+    more schedules, including tight budgets that force preemption churn
+    and LRU reclaim of the warm prefix set."""
+    _assert_shared_prefix_schedule(data, CASES)
