@@ -335,7 +335,6 @@ class Engine:
                     block=self.pool.block, resume=plan.resume)
                 entry.prefill_offset = plan.resume
                 self._n_prefix_hits += 1
-                self._prefill_tokens_saved += plan.resume
             else:
                 self._n_prefix_misses += 1
         return _StagingPrefill(entry=entry, bucket=bucket, step=step,
@@ -362,8 +361,7 @@ class Engine:
             return False
         if not self.paged:
             return True
-        shared = len(st.match.shared) if st.match is not None else 0
-        return self.pool.can_admit(st.entry.request, shared=shared)
+        return self.pool.can_admit(st.entry.request, match=st.match)
 
     def _admit_staged(self) -> None:
         """Completed staging prefill → pool admission: truncate the bucket
@@ -384,6 +382,10 @@ class Engine:
             slot = self.pool.admit_prefix(st.entry, single, st.match)
             if st.match.cow_src is not None:
                 self.pool.unpin_pages([st.match.cow_src])
+            # count the skipped span at admission, not staging start: a
+            # preempted staging prefill re-stages (and re-matches), so an
+            # early count would tally the same request's resume twice
+            self._prefill_tokens_saved += st.match.resume
         else:
             slot = self.pool.admit(st.entry, single)
         if self.prefix is not None:
@@ -540,14 +542,29 @@ class Engine:
                 if not self.continuous and not self.pool.has_free:
                     break
         if not self.pool.entries:
-            # an empty pool has every slot and page free, so anything still
-            # refused now can never be admitted (it bypassed the run()
-            # pre-check via queue.submit) — fail, don't spin
+            st = self._staging
+            if (st is not None and st.done and st.match is not None
+                    and not self._can_admit_staged(st)):
+                # the sharing plan itself can be what pins too much
+                # capacity (warm pages + the CoW source are off the free
+                # list while staged): drop it — the staging cache is
+                # complete, the seeded span bit-identical to a computed
+                # one — and admit privately like a miss before declaring
+                # the request unservable. The skipped span still counts as
+                # saved: it was never recomputed.
+                self.pool.unpin_pages(st.match.pages)
+                self._prefill_tokens_saved += st.match.resume
+                st.match = None
+                if self._can_admit_staged(st):
+                    self._admit_staged()
+        if not self.pool.entries:
+            # an empty pool has every slot and page free (or reclaimable),
+            # so anything still refused now can never be admitted (it
+            # bypassed the run() pre-check via queue.submit) — fail, don't
+            # spin
             st = self._staging
             if st is not None and st.done and not self._can_admit_staged(st):
                 self._staging = None
-                if st.match is not None:
-                    self.pool.unpin_pages(st.match.pages)
                 raise PoolExhausted(
                     f"request {st.entry.request.uid!r} cannot be admitted "
                     f"even into an empty pool "

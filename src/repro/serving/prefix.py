@@ -147,28 +147,31 @@ class PrefixCache:
 
     def match(self, prompt: np.ndarray) -> PrefixMatch:
         """The deepest resident block-aligned prefix of ``prompt``, as an
-        admission plan; touches matched nodes' recency."""
+        admission plan; touches the recency of the nodes the plan *uses*
+        (those covering ``[0, resume)`` — not deeper matched pages the
+        rounded-down resume leaves unread)."""
         prompt = np.asarray(prompt)
-        node, pages = self._root, []
+        node, nodes = self._root, []
         for digest, tokens in self._blocks(prompt):
             child = node.children.get(digest)
             if child is None or not np.array_equal(child.tokens, tokens):
                 break
             node = child
-            pages.append(node.page)
-        if not pages:
+            nodes.append(node)
+        if not nodes:
             return _MISS
-        cap = min(len(pages) * self.block, len(prompt) - 1)
+        cap = min(len(nodes) * self.block, len(prompt) - 1)
         resume = (cap // self.align) * self.align
         if resume <= 0:
             return _MISS
-        used = pages[:-(-resume // self.block)]   # pages covering [0, resume)
+        used = nodes[:-(-resume // self.block)]   # nodes covering [0, resume)
         self._tick += 1
-        walk = node
-        while walk is not self._root:
-            walk.tick = self._tick
-            walk = walk.parent
-        return PrefixMatch(resume=resume, pages=tuple(used),
+        walk = used[-1]   # matched-but-unused deeper pages keep their age:
+        while walk is not self._root:   # the plan never touches them, so
+            walk.tick = self._tick      # they must not out-compete used
+            walk = walk.parent          # pages for warm retention
+        return PrefixMatch(resume=resume,
+                           pages=tuple(n.page for n in used),
                            block=self.block)
 
     def insert(self, prompt: np.ndarray, pages) -> list[int]:

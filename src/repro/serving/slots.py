@@ -324,7 +324,8 @@ class PagedSlotPool:
                 n += 1
         return n
 
-    def can_admit(self, req: Request, *, shared: int = 0) -> bool:
+    def can_admit(self, req: Request, *,
+                  match: PrefixMatch | None = None) -> bool:
         """Slot free and enough pages for the prompt *plus the first decode
         write* (admitting with exactly the prompt's pages would preempt
         itself on the next step whenever ``prompt_len % block == 0``),
@@ -332,13 +333,28 @@ class PagedSlotPool:
         headroom a tight budget admits the queue head, grows an older slot,
         preempts the head again, and burns a full B=1 prefill per ping-pong
         cycle; fully-allocated slots claim none, so a budget with no growth
-        in flight fills every slot. ``shared`` pages (a prefix-cache match
-        attaching by reference) are already resident and claim nothing
-        new; reclaimable warm pages count as capacity."""
-        return (bool(self._free)
-                and self.pages_for(req.prompt_len + 1) - shared
-                + self._growth_pending()
-                <= self.available_pages)
+        in flight fills every slot. Reclaimable warm pages count as
+        capacity.
+
+        ``match`` is the staging prefill's prefix-cache plan: its shared
+        pages are already resident and claim nothing new, and a pinned CoW
+        source whose sole reference is the staging pin is *credited back*
+        — admission copies it and releases the pin, so it turns
+        reclaimable before the first decode write needs a page. Admission
+        itself (:meth:`admit_prefix`) still takes its fresh pages with the
+        pin held, so that draw is checked against uncredited capacity."""
+        if not self._free:
+            return False
+        shared = cow_credit = 0
+        if match is not None:
+            shared = len(match.shared)
+            if (match.cow_src is not None
+                    and self.refcount[match.cow_src] == 1):
+                cow_credit = 1
+        avail = self.available_pages
+        return (self.pages_for(req.prompt_len) - shared <= avail
+                and self.pages_for(req.prompt_len + 1) - shared - cow_credit
+                + self._growth_pending() <= avail)
 
     def __len__(self) -> int:
         return len(self.entries)

@@ -529,6 +529,92 @@ def test_prefix_cow_preserves_bit_identity(dense_params):
     _assert_drained(engine.pool)
 
 
+def test_prefix_match_ticks_only_used_pages():
+    """match() refreshes recency for the pages the plan *uses* only:
+    matched pages beyond the rounded-down resume keep their age, so an
+    unused deep page never out-competes genuinely warm pages for
+    retention."""
+    tree = PrefixCache(block=4, align=4)
+    a = np.arange(12, dtype=np.int32)
+    b = np.arange(100, 108, dtype=np.int32)
+    tree.insert(a, [0, 1, 2])
+    tree.insert(b, [3, 4])
+    m = tree.match(a)              # cap 11 -> resume 8: page 2 goes unused
+    assert m.resume == 8 and m.pages == (0, 1)
+    # page 2 kept its insert-time tick, so it is the LRU victim — branch
+    # b's leaf (page 4), touched later, must survive it
+    assert tree.reclaim(1, np.zeros(8, np.int64)) == [2]
+
+
+def test_prefix_cow_admits_on_minimal_budget(dense_params):
+    """An exactly-minimal page budget (n_blocks == pages_for(prompt+1),
+    accepted by check_fits) must admit a CoW prefix hit: the pinned CoW
+    source frees at admission, so can_admit credits it instead of holding
+    the request forever and dying at the empty-pool check."""
+    cfg = CASES[0]
+    params = dense_params
+    prompt = _prompt(cfg, 16, seed=51)
+    baseline = np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                                   gen_tokens=2))[0]
+    engine = Engine(cfg, params, capacity=2, max_seq=24, block=8, chunk=4,
+                    n_blocks=3)
+    results = engine.run([Request(uid=f"m{i}", prompt=prompt.copy(),
+                                  max_new_tokens=2) for i in range(2)])
+    for res in results:
+        np.testing.assert_array_equal(res.tokens, baseline, err_msg=res.uid)
+    assert engine.stats["prefix_hits"] == 1
+    assert engine.stats["cow_copies"] == 1         # sharing survived
+    _assert_drained(engine.pool)
+
+
+def test_prefix_hit_falls_back_to_private_admission(dense_params):
+    """When even the credited plan cannot fit (chunk ∤ block leaves the
+    resume mid-page with no shared pages, so the hit pins capacity private
+    admission needs), the engine drops the sharing plan at the empty-pool
+    check and admits the completed staging cache like a miss — never a
+    PoolExhausted crash for a request that serves with the cache off."""
+    cfg = CASES[0]
+    params = dense_params
+    prompt = _prompt(cfg, 15, seed=52)
+    baseline = np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                                   gen_tokens=1))[0]
+    engine = Engine(cfg, params, capacity=2, max_seq=16, block=8, chunk=3,
+                    n_blocks=2)
+    results = engine.run([Request(uid=f"f{i}", prompt=prompt.copy(),
+                                  max_new_tokens=1) for i in range(2)])
+    for res in results:
+        np.testing.assert_array_equal(res.tokens, baseline, err_msg=res.uid)
+    # the hit happened (its skipped span still counts as saved — those
+    # tokens were seeded, never recomputed), but admission went private
+    assert engine.stats["prefix_hits"] == 1
+    assert engine.stats["cow_copies"] == 0
+    assert engine.stats["prefill_tokens_saved"] == 6
+    _assert_drained(engine.pool)
+
+
+def test_prefill_tokens_saved_counts_at_admission(dense_params):
+    """The saved-token stat accrues when a hit *admits*, not when it
+    stages: a preempted staging prefill re-stages (and re-matches), so a
+    staging-time count would tally the same request twice."""
+    cfg = CASES[0]
+    params = dense_params
+    prompt = _prompt(cfg, 16, seed=53)
+    engine = Engine(cfg, params, capacity=2, max_seq=32, block=4, chunk=4)
+    engine.run([Request(uid="warm", prompt=prompt, max_new_tokens=2)])
+    saved0 = engine._prefill_tokens_saved
+    engine.submit(Request(uid="x", prompt=prompt.copy(), max_new_tokens=2))
+    engine._staging = engine._start_prefill(engine.queue.pop())
+    assert engine._staging.match is not None       # warm tree: a hit
+    assert engine._prefill_tokens_saved == saved0  # nothing yet
+    engine._preempt_youngest()                     # drop staging, requeue
+    assert engine._prefill_tokens_saved == saved0  # still nothing
+    results = engine.run([])                       # re-stage + admit
+    assert [r.uid for r in results] == ["x"]
+    # counted exactly once, at admission: resume = 12 for this geometry
+    assert engine._prefill_tokens_saved == saved0 + 12
+    _assert_drained(engine.pool)
+
+
 def test_prefix_hash_seed_stream_invariance(dense_params):
     """Engine streams and hit counts are invariant to the radix hash seed
     (serve.py --prefix-block-hash): the seed permutes tree keys only."""
