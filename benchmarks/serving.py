@@ -51,6 +51,15 @@ of every K/V leaf per step (bytes computed from the abstract cache tree),
 while the fused kernel's working set is its VMEM scratch, sized by one
 sequence's pages and independent of capacity.
 
+A gate-exempt marker row records the **exact-vs-SC attention A/B**
+(DESIGN.md §13): the same paged workload served with exact f32 attention
+and with ``attn_sc`` routing QK^T/PV through the bit-parallel popcount
+multiplier. The row hard-asserts that *each* mode's engine streams are
+bit-identical to its own sequential per-request baseline (the SC score
+path must keep the batch-composition invariance the engine's exactness
+story rests on), then records µs/token for both plus the per-bits
+output/score divergence of the SC path from ``sc_attention_divergence``.
+
 The workload is deterministic (fixed seeds, greedy sampling) and each mode
 is measured on its second run — the first run pays XLA compilation for the
 prefill/decode executables, which the compiled-step caches
@@ -147,7 +156,59 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                            max_gen))
     rows.append(_prefix_row(cfg, params, mesh, n, capacity, prompt_len,
                             max_gen))
+    rows.append(_sc_attention_row(cfg, params, mesh, n, capacity, prompt_len,
+                                  max_gen))
     return rows
+
+
+def _sc_attention_row(cfg, params, mesh, n: int, capacity: int,
+                      prompt_len: int, max_gen: int) -> dict:
+    """Exact-vs-SC attention A/B marker (gate-exempt): the same workload
+    served with exact attention and with the SC popcount score path
+    (DESIGN.md §13). Hard-asserted: each mode's engine streams reproduce
+    its own sequential per-request baseline bit-for-bit — SC attention
+    must preserve the batch-composition invariance, not just be "close".
+    Timed on the second run of each mode; the per-bits error columns come
+    from the ref-oracle divergence probe, not the serving run."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.error_analysis import sc_attention_divergence
+    from repro.launch.serve import generate
+    from repro.serving import Engine
+
+    max_seq = prompt_len + max_gen
+    stats = {}
+    for label, eng_cfg in (
+            ("exact", cfg),
+            ("sc", dataclasses.replace(cfg, attn_sc=True).validate())):
+        for _ in range(2):             # first run compiles, second times
+            engine = Engine(eng_cfg, params, capacity=capacity,
+                            max_seq=max_seq, mesh=mesh)
+            results = engine.run(_requests(cfg, n, prompt_len, max_gen))
+        stats[label] = engine.stats
+        for req, res in zip(_requests(cfg, n, prompt_len, max_gen), results):
+            baseline = np.asarray(generate(
+                eng_cfg, params, jnp.asarray(req.prompt)[None],
+                gen_tokens=req.max_new_tokens))[0]
+            np.testing.assert_array_equal(
+                res.tokens, baseline,
+                err_msg=f"{label} engine stream diverged from its "
+                        f"sequential baseline at {res.uid}")
+    err = " ".join(
+        f"b{d['bits']}_out_mad={d['output_mad']:.4f}"
+        f" b{d['bits']}_score_mad={d['score_mad']:.3f}"
+        for d in (sc_attention_divergence(b) for b in (4, 6, 8)))
+    return {
+        "name": f"serving/sc_attention/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (
+            f"exact_us_per_tok={1e6 / stats['exact']['tok_per_s']:.1f}"
+            f" sc_us_per_tok={1e6 / stats['sc']['tok_per_s']:.1f}"
+            f" sc_bits={cfg.sc_bits} {err}"
+            f" requests={n} capacity={capacity}"),
+    }
 
 
 def _prefix_row(cfg, params, mesh, n: int, capacity: int, prompt_len: int,

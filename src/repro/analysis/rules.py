@@ -317,7 +317,11 @@ class DtypeDrift(Rule):
 
     id = "R5"
     name = "dtype-drift"
-    scope = ("repro/kernels/", "repro/core/sc_matmul.py")
+    # models/layers.py entered scope with the SC attention path (DESIGN.md
+    # §13): its jnp flash/decode formulations now carry the same exactness
+    # contract as the kernels they mirror.
+    scope = ("repro/kernels/", "repro/core/sc_matmul.py",
+             "repro/models/layers.py")
 
     _HALF = {"bfloat16", "float16", "half"}
     _CONTRACTIONS = {"dot", "dot_general", "einsum", "matmul"}

@@ -64,6 +64,10 @@ class ModelConfig:
     dtype: str = "bfloat16"
     use_sc_gemm: bool = False        # route dense projections through SC-GEMM
     sc_bits: int = 8
+    # Route attention's QK^T/PV contractions through the SC popcount path
+    # (DESIGN.md §13) at ``sc_bits`` operand width — the paper's arithmetic
+    # in the serving hot loop. Off by default: exact attention.
+    attn_sc: bool = False
     # SC-GEMM kernel choice for every sc_dense call site (DESIGN.md §6):
     # auto | mxu_split | pallas | pallas_tuned | ref. "auto" defers to
     # $REPRO_SC_IMPL and then the backend/autotune-cache dispatch.
@@ -120,6 +124,11 @@ class ModelConfig:
         assert self.paged_attn_kernel in ("auto", "jnp", "pallas_tuned"), (
             f"{self.name}: unknown paged_attn_kernel "
             f"{self.paged_attn_kernel!r}")
+        if self.attn_sc:
+            from repro.kernels.sc_attention import sc_attention_bits_ok
+            assert sc_attention_bits_ok(self.sc_bits), (
+                f"{self.name}: attn_sc needs 2 <= sc_bits <= 8, "
+                f"got {self.sc_bits}")
         if self.family != "ssm":
             assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
         assert self.n_layers % self.group_size == 0, (

@@ -12,7 +12,8 @@ import numpy as np
 from .multipliers import MULTIPLIERS
 from .tcu import stream_length
 
-__all__ = ["exhaustive_grid", "mae", "error_vs_operand_difference", "table2_mae"]
+__all__ = ["exhaustive_grid", "mae", "error_vs_operand_difference", "table2_mae",
+           "sc_attention_divergence"]
 
 
 def exhaustive_grid(bits: int) -> tuple[jax.Array, jax.Array]:
@@ -44,6 +45,40 @@ def table2_mae(bits: int = 8,
     """MAE for every multiplier — the accuracy column of the paper's Table II."""
     multipliers = multipliers or MULTIPLIERS
     return {name: mae(fn, bits) for name, fn in multipliers.items()}
+
+
+def sc_attention_divergence(bits: int, *, b: int = 2, kv: int = 2, g: int = 2,
+                            s: int = 64, d: int = 32,
+                            seed: int = 0) -> dict[str, float]:
+    """Exact-vs-SC attention divergence on a seeded synthetic problem.
+
+    Runs the same (B, H, S, D) causal attention once through the exact f32
+    oracle and once through the SC score path (DESIGN.md §13) at ``bits``
+    operand width, and reports the mean absolute divergence of the outputs
+    plus the mean absolute error of the raw (pre-softmax, unit-scale) scores
+    — the serving bench's per-bits error columns.
+    """
+    from repro.kernels import ref   # lazy: kernels import core
+
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kvv = jax.random.split(key, 3)
+    h = kv * g
+    q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, kv, s, d), jnp.float32)
+    v = jax.random.normal(kvv, (b, kv, s, d), jnp.float32)
+
+    exact = ref.flash_attention_ref(q, k, v, causal=True)
+    sc = ref.sc_flash_attention_ref(q, k, v, bits=bits, causal=True)
+
+    kr = jnp.repeat(k, g, axis=1)
+    scores_exact = jnp.einsum("bhqd,bhkd->bhqk", q, kr,
+                              preferred_element_type=jnp.float32)
+    scores_sc = ref.sc_attention_scores_ref(q, kr, bits=bits)
+    return {
+        "bits": bits,
+        "output_mad": float(jnp.mean(jnp.abs(exact - sc))),
+        "score_mad": float(jnp.mean(jnp.abs(scores_exact - scores_sc))),
+    }
 
 
 def error_vs_operand_difference(name_or_fn, bits: int = 8,

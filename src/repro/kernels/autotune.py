@@ -78,9 +78,12 @@ CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 #: so keeping it would permanently pin decode shapes to the old 128-row
 #: tile (a cache hit never re-sweeps). v4 adds the paged-flash family
 #: (``paged:`` keys) and bumps the document schema with it so every cache
-#: file carries exactly one key grammar. Older documents are *invalidated*
-#: on load (not migrated); affected shapes simply re-tune once.
-CACHE_VERSION = 4
+#: file carries exactly one key grammar. v5 appends the SC-attention
+#: variant segment (``:sc<bits>``) to the flash and paged key grammars —
+#: a v4 winner was swept on the float contraction only and must not serve
+#: the SC path (or vice versa). Older documents are *invalidated* on load
+#: (not migrated); affected shapes simply re-tune once.
+CACHE_VERSION = 5
 
 #: VMEM budget used to prune candidates; conservative fraction of ~16 MiB.
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
@@ -240,28 +243,33 @@ class AutotuneCache:
     def flash_key(b: int, h: int, kv: int, sq: int, skv: int, d: int,
                   causal: bool, backend: str | None = None,
                   interpret: bool | None = None,
-                  dtype: str = "float32") -> str:
+                  dtype: str = "float32",
+                  sc_bits: int | None = None) -> str:
         """Unlike SC-GEMM (always quantized from fp32 inside the kernel
         call), flash operands keep their real dtype, which changes per-tile
-        memory traffic — so the key carries it."""
+        memory traffic — so the key carries it. The SC score path does very
+        different per-tile work (integer popcount contraction vs MXU dot),
+        so its variant keys its own bucket (``sc0`` = float)."""
         backend = backend or jax.default_backend()
         c = "causal" if causal else "full"
         return (f"flash:{backend}:{_mode(interpret, backend)}:b{b}:h{h}:kv{kv}"
-                f":sq{sq}:skv{skv}:d{d}:{dtype}:{c}")
+                f":sq{sq}:skv{skv}:d{d}:{dtype}:{c}:sc{sc_bits or 0}")
 
     @staticmethod
     def paged_key(c: int, kv: int, g: int, d: int, block: int,
                   max_blocks: int, window: int | None, softcap: bool,
                   backend: str | None = None, interpret: bool | None = None,
-                  dtype: str = "float32") -> str:
+                  dtype: str = "float32", sc_bits: int | None = None) -> str:
         """Key for the paged decode-attention kernel. The whole page-walk
         geometry is static per serving configuration (capacity, head
         layout, page size, table width), so it all goes in the key; the
-        window / softcap flags change the masking work per step."""
+        window / softcap flags change the masking work per step, and the
+        SC variant (``sc<bits>``; ``sc0`` = float) swaps the contraction
+        arithmetic entirely."""
         backend = backend or jax.default_backend()
         return (f"paged:{backend}:{_mode(interpret, backend)}:c{c}:kv{kv}"
                 f":g{g}:d{d}:blk{block}:mb{max_blocks}:w{window or 0}"
-                f":cap{int(softcap)}:{dtype}")
+                f":cap{int(softcap)}:{dtype}:sc{sc_bits or 0}")
 
     def _load(self) -> None:
         self._entries = self._read_disk()
@@ -424,23 +432,26 @@ def candidate_flash_configs(sq: int, skv: int, d: int, *,
 
 def candidate_paged_configs(kv: int, g: int, d: int, *, block: int,
                             max_blocks: int,
-                            vmem_budget: int = VMEM_BUDGET_BYTES
-                            ) -> list[PagedFlashConfig]:
+                            vmem_budget: int = VMEM_BUDGET_BYTES,
+                            sc: bool = False) -> list[PagedFlashConfig]:
     """KV-heads-per-step grid for the paged decode kernel: every divisor of
     the KV head count whose tiles + whole-row scratch fit the VMEM budget.
 
-    Full-MHA layouts (``g == 1``) drop ``kvh = 1`` — the whole-row score
-    einsum that keeps ``g == 1`` in the bit-identity envelope needs ≥ 2 KV
-    heads per grid step (a single-head slice lowers to a different
+    Float full-MHA layouts (``g == 1``) drop ``kvh = 1`` — the whole-row
+    score einsum that keeps ``g == 1`` in the bit-identity envelope needs
+    ≥ 2 KV heads per grid step (a single-head slice lowers to a different
     contraction; see kernels/paged_attention.py, which rejects the combo).
     Single-KV-head full-MHA (``kv == 1``) therefore yields an empty grid,
-    which the dispatch gate reads as "fall back to the gather path".
+    which the dispatch gate reads as "fall back to the gather path". The SC
+    variant (``sc=True``) has no such restriction — its popcount
+    contraction is elementwise, insensitive to head layout — so every
+    divisor stays in the grid.
     """
     out = []
     for kvh in (1, 2, 4, 8, 16):
         if kv % kvh != 0 or kvh > kv:
             continue
-        if g == 1 and kvh == 1:
+        if g == 1 and kvh == 1 and not sc:
             continue
         cfg = PagedFlashConfig(kvh=kvh)
         if cfg.is_valid() and cfg.vmem_bytes(max_blocks=max_blocks,
@@ -647,7 +658,8 @@ def get_or_tune_stream(x, y, *, bits: int = 8,
 # -------------------------------------------------------- flash-kernel sweep
 
 def _time_flash_config(q, k, v, causal: bool, cfg: FlashConfig, iters: int,
-                       interpret: bool | None) -> float:
+                       interpret: bool | None,
+                       sc_bits: int | None = None) -> float:
     from .flash_attention import flash_attention_pallas
     from .ops import default_interpret
 
@@ -656,7 +668,8 @@ def _time_flash_config(q, k, v, causal: bool, cfg: FlashConfig, iters: int,
     def call():
         return jax.block_until_ready(
             flash_attention_pallas(q, k, v, causal=causal, bq=cfg.bq,
-                                   bk=cfg.bk, interpret=interp))
+                                   bk=cfg.bk, interpret=interp,
+                                   sc_bits=sc_bits))
 
     return best_of_us(call, iters)
 
@@ -665,17 +678,21 @@ def get_or_tune_flash(q, k, v, *, causal: bool = True,
                       cache: AutotuneCache | None = None,
                       candidates: Sequence[FlashConfig] | None = None,
                       iters: int = 3,
-                      interpret: bool | None = None) -> FlashConfig:
+                      interpret: bool | None = None,
+                      sc_bits: int | None = None) -> FlashConfig:
     """Cached best (bq, bk) for the flash kernel at this problem shape.
 
     ``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)`` — the kernel layout.
+    The SC score path (``sc_bits``) sweeps and caches its own bucket: the
+    popcount contraction's block-size trade-offs are unrelated to the MXU
+    dot's.
     """
     b, h, sq, d = q.shape
     _, kv, skv, _ = k.shape
     dtype = jnp.dtype(q.dtype).name
     cache = cache if cache is not None else _default_cache()
     key = cache.flash_key(b, h, kv, sq, skv, d, causal, interpret=interpret,
-                          dtype=dtype)
+                          dtype=dtype, sc_bits=sc_bits)
     hit = cache.get(key, FlashConfig)
     if hit is not None:
         return hit
@@ -697,12 +714,12 @@ def get_or_tune_flash(q, k, v, *, causal: bool = True,
         cfg, us = _sweep_outside_trace(lambda: _sweep(
             cands,
             lambda c: _time_flash_config(qs, ks, vs, causal, c, iters,
-                                         interpret), what))
+                                         interpret, sc_bits), what))
     else:
         cfg, us = _sweep(
             cands,
             lambda c: _time_flash_config(q, k, v, causal, c, iters,
-                                         interpret), what)
+                                         interpret, sc_bits), what)
     cache.put(key, cfg, elapsed_us=us)
     return cfg
 
@@ -711,7 +728,8 @@ def get_or_tune_flash(q, k, v, *, causal: bool = True,
 
 def _time_paged_config(q, kp, vp, tables, qpos, window, softcap,
                        cfg: PagedFlashConfig, iters: int,
-                       interpret: bool | None) -> float:
+                       interpret: bool | None,
+                       sc_bits: int | None = None) -> float:
     from .ops import default_interpret
     from .paged_attention import paged_attention_pallas
 
@@ -721,7 +739,7 @@ def _time_paged_config(q, kp, vp, tables, qpos, window, softcap,
         return jax.block_until_ready(
             paged_attention_pallas(q, kp, vp, tables, qpos, window=window,
                                    logit_softcap=softcap, kvh=cfg.kvh,
-                                   interpret=interp))
+                                   interpret=interp, sc_bits=sc_bits))
 
     return best_of_us(call, iters)
 
@@ -738,7 +756,8 @@ def get_or_tune_paged(q, k_pages, v_pages, tables, q_positions, *,
                       cache: AutotuneCache | None = None,
                       candidates: Sequence[PagedFlashConfig] | None = None,
                       iters: int = 3,
-                      interpret: bool | None = None) -> PagedFlashConfig:
+                      interpret: bool | None = None,
+                      sc_bits: int | None = None) -> PagedFlashConfig:
     """Cached best KV-heads-per-step for the paged decode-attention kernel.
 
     ``q: (C, KV, G, D)``; ``k_pages, v_pages: (P, block, KV, D)``;
@@ -754,13 +773,14 @@ def get_or_tune_paged(q, k_pages, v_pages, tables, q_positions, *,
     cache = cache if cache is not None else _default_cache()
     key = cache.paged_key(c, kv, g, d, block, max_blocks, window,
                           logit_softcap is not None, interpret=interpret,
-                          dtype=dtype)
+                          dtype=dtype, sc_bits=sc_bits)
     hit = cache.get(key, PagedFlashConfig)
     if hit is not None:
         return hit
     cands = (list(candidates) if candidates is not None
              else candidate_paged_configs(kv, g, d, block=block,
-                                          max_blocks=max_blocks))
+                                          max_blocks=max_blocks,
+                                          sc=sc_bits is not None))
     what = f"paged (c={c},kv={kv},g={g},d={d}) blk{block}x{max_blocks}"
     if any(_is_tracer(t) for t in (q, k_pages, v_pages, tables, q_positions)):
         c_s = min(c, SYNTH_C_CAP)
@@ -785,7 +805,7 @@ def get_or_tune_paged(q, k_pages, v_pages, tables, q_positions, *,
                 cands,
                 lambda cf: _time_paged_config(qs, ks, vs, tbl, qp, window,
                                               logit_softcap, cf, iters,
-                                              interpret), what)
+                                              interpret, sc_bits), what)
 
         cfg, us = _sweep_outside_trace(synth_sweep)
     else:
@@ -793,7 +813,8 @@ def get_or_tune_paged(q, k_pages, v_pages, tables, q_positions, *,
             cands,
             lambda cf: _time_paged_config(q, k_pages, v_pages, tables,
                                           q_positions, window, logit_softcap,
-                                          cf, iters, interpret), what)
+                                          cf, iters, interpret, sc_bits),
+            what)
     cache.put(key, cfg, elapsed_us=us)
     return cfg
 

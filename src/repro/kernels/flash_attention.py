@@ -21,7 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.errors import ConfigError
+
 from ._compat import CompilerParams as _CompilerParams
+from .sc_attention import sc_pv, sc_scores
 
 __all__ = ["flash_attention_pallas"]
 
@@ -29,7 +32,7 @@ NEG_INF = -1e30
 
 
 def _kernel(bq: int, bk: int, scale: float, causal: bool, nk: int,
-            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+            sc_bits, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -49,8 +52,14 @@ def _kernel(bq: int, bk: int, scale: float, causal: bool, nk: int,
         q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
         v = v_ref[0, 0]                              # (bk, d)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
+        if sc_bits is None:
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+        else:
+            # SC score path (DESIGN.md §13): popcount contraction over the
+            # quantized sign-magnitude planes, dequantized into the same
+            # f32 online-softmax state the float path feeds.
+            s = sc_scores(q, k, bits=sc_bits) * scale
         if causal:
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
@@ -61,8 +70,12 @@ def _kernel(bq: int, bk: int, scale: float, causal: bool, nk: int,
         alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])          # (bq, 1)
         p = jnp.exp(s - m_new[:, :1])                          # (bq, bk)
         l_new = l_ref[...][:, :1] * alpha + p.sum(axis=1, keepdims=True)
-        pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
+        if sc_bits is None:
+            pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        else:
+            pv = sc_pv(p, v[None].astype(jnp.float32), bits=sc_bits)  # (bq, d)
         acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = m_new
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
@@ -73,21 +86,31 @@ def _kernel(bq: int, bk: int, scale: float, causal: bool, nk: int,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret",
+                                             "sc_bits"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, bq: int = 256, bk: int = 512,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           sc_bits: int | None = None) -> jax.Array:
     """``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)``; returns ``(B, H, Sq, D)``.
 
     Sq/Skv must be multiples of bq/bk and D of 128 (ops-level callers pad).
+    ``sc_bits`` switches the QK^T/PV contractions to the SC popcount path
+    (DESIGN.md §13); ``None`` is the exact float path.
     """
     b, h, sq, d = q.shape
     _, kv, skv, _ = k.shape
     g = h // kv
+    if sq % bq or skv % bk:
+        # The grid below floors sq//bq, skv//bk — a non-multiple shape would
+        # silently leave the tail rows as uninitialized garbage.
+        raise ConfigError(
+            f"flash kernel needs Sq % bq == 0 and Skv % bk == 0 (callers "
+            f"pad): got Sq={sq}, Skv={skv} with bq={bq}, bk={bk}")
     nq, nk = sq // bq, skv // bk
     scale = d ** -0.5
 
-    kernel = functools.partial(_kernel, bq, bk, scale, causal, nk)
+    kernel = functools.partial(_kernel, bq, bk, scale, causal, nk, sc_bits)
     return pl.pallas_call(
         kernel,
         grid=(b, h, nq, nk),

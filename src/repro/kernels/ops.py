@@ -111,6 +111,10 @@ def sc_stream_mul(x: jax.Array, y: jax.Array, *, bits: int = 8,
     padding group, ``128·block_rows`` elements); ``tune=True`` resolves it
     through the autotune cache instead.
     """
+    if x.size == 0:
+        # an empty operand would reach pallas_call with grid=(0,) — return
+        # the empty result directly instead of relying on backend behavior
+        return jnp.zeros(x.shape, jnp.int32)
     if interpret is None:
         interpret = default_interpret()
     if tune:
@@ -123,20 +127,24 @@ def sc_stream_mul(x: jax.Array, y: jax.Array, *, bits: int = 8,
 
 def flash_attention_tuned(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           causal: bool = True,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          sc_bits: int | None = None) -> jax.Array:
     """Flash-attention Pallas kernel with autotuned (bq, bk) block sizes.
 
     Kernel layout: ``q: (B, H, Sq, D)``; ``k, v: (B, KV, Skv, D)``. Sq/Skv
     must be multiples of 128 and D a multiple of 128 (the model-layer caller
     checks eligibility and falls back to the jnp formulation otherwise).
+    ``sc_bits`` selects the SC score path; it keys its own autotune bucket.
     """
     if interpret is None:
         interpret = default_interpret()
     from .autotune import get_or_tune_flash
     from .flash_attention import flash_attention_pallas
-    cfg = get_or_tune_flash(q, k, v, causal=causal, interpret=interpret)
+    cfg = get_or_tune_flash(q, k, v, causal=causal, interpret=interpret,
+                            sc_bits=sc_bits)
     return flash_attention_pallas(q, k, v, causal=causal, bq=cfg.bq,
-                                  bk=cfg.bk, interpret=interpret)
+                                  bk=cfg.bk, interpret=interpret,
+                                  sc_bits=sc_bits)
 
 
 def paged_decode_attention_tuned(q: jax.Array, k_pages: jax.Array,
@@ -144,7 +152,8 @@ def paged_decode_attention_tuned(q: jax.Array, k_pages: jax.Array,
                                  q_positions: jax.Array, *,
                                  window: int | None = None,
                                  logit_softcap: float | None = None,
-                                 interpret: bool | None = None) -> jax.Array:
+                                 interpret: bool | None = None,
+                                 sc_bits: int | None = None) -> jax.Array:
     """Fused paged decode attention with the autotuned KV-heads-per-step.
 
     Kernel layout: ``q (C, KV, G, D)``; ``k_pages, v_pages
@@ -159,7 +168,8 @@ def paged_decode_attention_tuned(q: jax.Array, k_pages: jax.Array,
     from .paged_attention import paged_attention_pallas
     cfg = get_or_tune_paged(q, k_pages, v_pages, tables, q_positions,
                             window=window, logit_softcap=logit_softcap,
-                            interpret=interpret)
+                            interpret=interpret, sc_bits=sc_bits)
     return paged_attention_pallas(q, k_pages, v_pages, tables, q_positions,
                                   window=window, logit_softcap=logit_softcap,
-                                  kvh=cfg.kvh, interpret=interpret)
+                                  kvh=cfg.kvh, interpret=interpret,
+                                  sc_bits=sc_bits)

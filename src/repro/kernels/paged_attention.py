@@ -70,7 +70,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.errors import ConfigError
+
 from ._compat import CompilerParams as _CompilerParams
+from .sc_attention import sc_pv, sc_scores
 
 __all__ = ["paged_attention_pallas"]
 
@@ -78,7 +81,7 @@ NEG_INF = -1e30
 
 
 def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
-            logit_softcap: float | None,
+            logit_softcap: float | None, sc_bits: int | None,
             tables_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref, sk_ref, vb_ref):
     ci = pl.program_id(0)
     ji = pl.program_id(2)
@@ -88,7 +91,7 @@ def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
     kvh = q_ref.shape[1]
     s_len = max_blocks * block
 
-    if g == 1:
+    if g == 1 and sc_bits is None:
         # Full-MHA path: per-page score tiles are NOT in the bit-identity
         # envelope here — with a size-1 group dim XLA lowers the dense
         # path's score einsum to a contraction whose bits a block-length
@@ -112,13 +115,22 @@ def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
         def _score():
             q = q_ref[...]                           # (1, kvh, g, d)
             k = k_ref[...]                           # (1, block, kvh, d)
-            # literally the dense path's score einsum — same dim structure
-            # ("bqcgd,bkcd->bcgqk" with b=1, q folded into the lead axis),
-            # so XLA lowers the same contraction micro-kernel and the bits
-            # match
-            s = jnp.einsum("bqcgd,bkcd->bcgqk", q[None], k,
-                           preferred_element_type=jnp.float32) * scale
-            s = s[0, :, :, 0]                        # (kvh, g, block)
+            if sc_bits is not None:
+                # SC scores are popcount contractions — elementwise integer
+                # sums with no einsum lowering sensitivity, so a per-page
+                # tile reproduces the gathered-dense SC bits at *any* head
+                # layout (no g >= 2 / kvh >= 2 restriction; DESIGN.md §13).
+                q_r = q[0][:, :, None, :]                      # (kvh, g, 1, d)
+                k_r = k[0].transpose(1, 0, 2)[:, None, :, :]   # (kvh, 1, bl, d)
+                s = sc_scores(q_r, k_r, bits=sc_bits)[:, :, 0, :] * scale
+            else:
+                # literally the dense path's score einsum — same dim
+                # structure ("bqcgd,bkcd->bcgqk" with b=1, q folded into the
+                # lead axis), so XLA lowers the same contraction
+                # micro-kernel and the bits match
+                s = jnp.einsum("bqcgd,bkcd->bcgqk", q[None], k,
+                               preferred_element_type=jnp.float32) * scale
+                s = s[0, :, :, 0]                    # (kvh, g, block)
             if logit_softcap is not None:
                 s = logit_softcap * jnp.tanh(s / logit_softcap)
             kpos = page_start + jax.lax.broadcasted_iota(jnp.int32,
@@ -136,7 +148,7 @@ def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
 
     @pl.when(ji == max_blocks - 1)
     def _finish():
-        if g == 1:
+        if g == 1 and sc_bits is None:
             # whole-row scores over the buffered pages, flattened back to
             # the dense S axis — operand shapes exactly as the gathered
             # path's b=1 slice, so the lowering (and the bits) coincide
@@ -163,29 +175,39 @@ def _kernel(block: int, max_blocks: int, scale: float, window: int | None,
         un = jnp.exp(s - m)
         denom = jnp.sum(un, axis=-1, keepdims=True)
         p = un / denom
-        # literally the dense path's PV einsum on this slot's rows, with
-        # the page-major scratch flattened back to the dense S axis
+        # literally the dense path's PV on this slot's rows, with the
+        # page-major scratch flattened back to the dense S axis
         v = vb_ref[...].reshape(1, s_len, kvh, -1)   # (1, S, kvh, d)
-        out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v,  # fp32, like the dense PV
-                         preferred_element_type=jnp.float32)
+        if sc_bits is not None:
+            # same operand alignment as the dense SC decode path: v rows
+            # keyed (1, kvh, 1, 1, S, d) against p (1, kvh, g, 1, S)
+            out = sc_pv(p, v.transpose(0, 2, 1, 3)[:, :, None, None],
+                        bits=sc_bits)                # (1, kvh, g, 1, d)
+        else:
+            out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v,  # fp32, dense PV
+                             preferred_element_type=jnp.float32)
         o_ref[0] = out[0, :, :, 0].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "logit_softcap",
-                                             "kvh", "interpret"))
+                                             "kvh", "interpret", "sc_bits"))
 def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, tables: jax.Array,
                            q_positions: jax.Array, *,
                            window: int | None = None,
                            logit_softcap: float | None = None,
                            kvh: int = 1,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           sc_bits: int | None = None) -> jax.Array:
     """``q: (C, KV, G, D)``; ``k_pages, v_pages: (P, block, KV, D)``;
     ``tables: (C, MB) int32`` (−1 = unallocated); ``q_positions: (C,)``.
 
     Returns ``(C, KV, G, D)`` — bit-identical to gathering the pages dense
-    and running :func:`repro.models.layers.decode_attention`. ``kvh`` must
-    divide KV (autotuned via :class:`~repro.kernels.autotune.PagedFlashConfig`).
+    and running :func:`repro.models.layers.decode_attention` (with the same
+    ``sc_bits``). ``kvh`` must divide KV (autotuned via
+    :class:`~repro.kernels.autotune.PagedFlashConfig`). ``sc_bits`` routes
+    the score/PV contractions through the SC popcount path (DESIGN.md §13),
+    which carries no head-layout restrictions.
     """
     c, kv, g, d = q.shape
     n_pages, block, _, _ = k_pages.shape
@@ -195,14 +217,18 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
     if kv % kvh != 0:
         # a non-dividing kvh would truncate the head grid and return
         # uninitialized output rows for the remainder — fail loudly instead
-        raise ValueError(f"kvh={kvh} must divide the KV head count {kv}")
-    if g == 1 and kvh == 1:
+        raise ConfigError(
+            f"paged kernel: kvh must divide the KV head count: got "
+            f"kvh={kvh}, KV={kv}")
+    if g == 1 and kvh == 1 and sc_bits is None:
         # the full-MHA whole-row einsum only reproduces the dense bits when
         # the grid step carries >= 2 KV heads (a single-head slice lowers to
         # a different contraction) — candidate_paged_configs never proposes
-        # this point; refuse direct calls rather than return close-but-off
-        raise ValueError("full-MHA (G == 1) requires kvh >= 2 for "
-                         "bit-identity; got kvh=1")
+        # this point; refuse direct calls rather than return close-but-off.
+        # The SC path has no such restriction: its contraction is an
+        # elementwise integer popcount sum, insensitive to head layout.
+        raise ConfigError("full-MHA (G == 1) requires kvh >= 2 for "
+                          "bit-identity on the float path; got kvh=1")
 
     def qmap(ci, hi, ji, tbl, qp):
         return (ci, hi, 0, 0)
@@ -222,17 +248,18 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, kvh, g, d), qmap),
         scratch_shapes=[
-            # g >= 2: masked per-page score tiles. g == 1 (full-MHA): raw K
-            # pages in the cache dtype — scoring happens whole-row at the
-            # finish step (see _kernel), so no cast may touch K before it.
+            # Float g >= 2 and every SC layout: masked per-page score tiles.
+            # Float g == 1 (full-MHA): raw K pages in the cache dtype —
+            # scoring happens whole-row at the finish step (see _kernel),
+            # so no cast may touch K before it.
             pltpu.VMEM((max_blocks, block, kvh, d), k_pages.dtype)
-            if g == 1 else
+            if (g == 1 and sc_bits is None) else
             pltpu.VMEM((max_blocks, kvh, g, block), jnp.float32),
             pltpu.VMEM((max_blocks, block, kvh, d), jnp.float32),  # fp32 V
         ],
     )
     kernel = functools.partial(_kernel, block, max_blocks, scale, window,
-                               logit_softcap)
+                               logit_softcap, sc_bits)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

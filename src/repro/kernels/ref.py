@@ -11,7 +11,9 @@ from repro.core.tcu import (correlation_encode, pack_stream, stream_length,
                             tcu_decode)
 
 __all__ = ["sc_matmul_counts_ref", "sc_matmul_ref", "sc_stream_mul_ref",
-           "sc_stream_words_ref"]
+           "sc_stream_words_ref", "flash_attention_ref",
+           "sc_attention_scores_ref", "sc_attention_pv_ref",
+           "sc_flash_attention_ref", "sc_decode_attention_ref"]
 
 
 def sc_matmul_counts_ref(sx, mx, sy, my, bits: int) -> jnp.ndarray:
@@ -65,3 +67,89 @@ def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
+
+
+# -------------------------------------------------- SC attention (DESIGN §13)
+#
+# These oracles build on the *canonical* core ops (the jitted
+# quantize_sign_magnitude / proposed_closed_form), independently of the raw
+# helpers in kernels/sc_attention.py that the kernels and model layers
+# share. Tests assert:
+#   * sc_attention_scores_ref / sc_attention_pv_ref vs the raw helpers —
+#     integer planes bitwise, f32 dequant to 1 ulp (the jitted core
+#     quantizer's scale division fuses differently from an eager trace of
+#     the same math);
+#   * the Pallas SC kernels vs these full-attention oracles — allclose
+#     (online-softmax vs plain-softmax re-rounds the prob quantization).
+
+def sc_attention_scores_ref(q, k, *, bits: int) -> jnp.ndarray:
+    """Dequantized SC scores: ``q (..., Q, D)`` × ``k (..., K, D)`` →
+    f32 ``(..., Q, K)``, per-row sign-magnitude quantization, unscaled (the
+    caller applies ``d ** -0.5``)."""
+    qq = quantize_sign_magnitude(q.astype(jnp.float32), bits=bits, axis=-1)
+    qk = quantize_sign_magnitude(k.astype(jnp.float32), bits=bits, axis=-1)
+    o = proposed_closed_form(qq.mag[..., :, None, :], qk.mag[..., None, :, :],
+                             bits=bits)
+    s = (qq.sign[..., :, None, :].astype(jnp.int32) *
+         qk.sign[..., None, :, :].astype(jnp.int32))
+    counts = (s * o).sum(axis=-1, dtype=jnp.int32)
+    return counts.astype(jnp.float32) * (
+        stream_length(bits) * qq.scale * jnp.swapaxes(qk.scale, -1, -2))
+
+
+def sc_attention_pv_ref(p, v, *, bits: int) -> jnp.ndarray:
+    """SC prob-weighted value mix: ``p (..., K)`` × ``v (..., K, D)`` →
+    f32 ``(..., D)``. Probs quantize per row over K, values per row over D;
+    the O-term dequantizes elementwise (PV scales don't factorize) and the
+    f32 sum runs over the key axis."""
+    qp = quantize_sign_magnitude(p.astype(jnp.float32), bits=bits, axis=-1)
+    qv = quantize_sign_magnitude(v.astype(jnp.float32), bits=bits, axis=-1)
+    o = proposed_closed_form(qp.mag[..., :, None], qv.mag, bits=bits)
+    sgn = qp.sign[..., :, None].astype(jnp.int32) * qv.sign.astype(jnp.int32)
+    term = (sgn * o).astype(jnp.float32) * qv.scale
+    return term.sum(axis=-2) * (stream_length(bits) * qp.scale)
+
+
+def sc_flash_attention_ref(q, k, v, *, bits: int,
+                           causal: bool = True) -> jnp.ndarray:
+    """Plain-softmax SC attention oracle in the flash kernel layout:
+    ``q (B, H, Sq, D)``; ``k, v (B, KV, Skv, D)`` (GQA broadcast)."""
+    b, h, sq, d = q.shape
+    _, kv, skv, _ = k.shape
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = sc_attention_scores_ref(q, k, bits=bits) * (d ** -0.5)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = sc_attention_pv_ref(p, v[:, :, None], bits=bits)   # (B, H, Sq, D)
+    return out.astype(q.dtype)
+
+
+def sc_decode_attention_ref(q, k_cache, v_cache, *, q_position, bits: int,
+                            window: int | None = None,
+                            logit_softcap: float | None = None) -> jnp.ndarray:
+    """Gathered-dense SC decode oracle in the model-layer layout:
+    ``q (B, 1, H, D)``; ``k_cache, v_cache (B, S, KV, D)``; masks beyond
+    ``q_position`` / outside the sliding window exactly like
+    ``models.layers.decode_attention``."""
+    b, _, h, d = q.shape
+    _, s_len, kv, _ = k_cache.shape
+    g = h // kv
+    qh = q.transpose(0, 2, 1, 3)                        # (b, h, 1, d)
+    k = jnp.repeat(k_cache.transpose(0, 2, 1, 3), g, axis=1)  # (b, h, S, d)
+    v = jnp.repeat(v_cache.transpose(0, 2, 1, 3), g, axis=1)
+    s = sc_attention_scores_ref(qh, k, bits=bits) * (d ** -0.5)  # (b, h, 1, S)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    kpos = jnp.arange(s_len)
+    qpos = jnp.asarray(q_position).reshape(-1)          # (b,) or scalar
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = sc_attention_pv_ref(p, v[:, :, None], bits=bits)  # (b, h, 1, d)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)    # (b, 1, h, d)

@@ -1,0 +1,136 @@
+"""Shared SC-attention primitives: the paper's AND+popcount multiplier as
+the QK^T / PV contraction of an attention step (DESIGN.md §13).
+
+Both attention kernels (``kernels/flash_attention.py``,
+``kernels/paged_attention.py``) and the jnp model-layer paths
+(``models/layers.py``) call these helpers, so the SC score path has exactly
+one formulation — the mechanism behind the bit-identity contract: integer
+popcount sums are order- and blocking-invariant, and every f32 step here is
+elementwise, so any two callers that see the same rows produce the same
+bits regardless of how the sequence axis is tiled, paged, or padded.
+
+Quantization points (all per-row, the ``sc_dense`` batch-invariance trick):
+
+* Q rows over the head dim (one scale per query token-head),
+* K rows over the head dim (one scale per key token-head),
+* softmax prob rows over the key axis (one scale per query row),
+* V rows over the head dim (one scale per value token-head).
+
+Per-row scales mean a row's quantized planes never depend on which other
+rows share its batch, chunk, or page — masked/garbage rows quantize to
+whatever they like and then contribute *exactly* nothing, because
+``O(0, y) = 0`` for every ``y`` (the closed form's clamp floors the
+zero-magnitude operand) and a masked prob is an exact f32 ``0.0`` whose
+magnitude plane is all zeros.
+
+Everything here is raw jnp (no ``jax.jit`` wrappers): these run inside
+Pallas kernel bodies, where nested jit calls do not lower. The math mirrors
+``core.sc_numerics.quantize_sign_magnitude`` / ``core.multipliers.
+proposed_closed_form`` operation-for-operation; tests assert bit-equality
+of the integer planes (sign/mag/popcounts) against those canonical
+implementations — the f32 scale agrees only to 1 ulp, because the jitted
+core fns fuse the scale division differently than an eager trace of the
+same expression. Bit-identity claims therefore always compare two callers
+of *these* helpers (kernel vs gathered-dense, engine vs sequential), never
+across the helper/core boundary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcu import stream_length
+
+__all__ = ["SC_ATTN_BITS_MIN", "SC_ATTN_BITS_MAX", "sc_attention_bits_ok",
+           "sc_quant_rows", "sc_popcount", "sc_scores", "sc_pv"]
+
+#: Operand widths the SC score path accepts. The closed form is validated
+#: for B = 2..8; above 8 the (counts · d) accumulators would still fit
+#: int32, but nothing tunes or tests there.
+SC_ATTN_BITS_MIN = 2
+SC_ATTN_BITS_MAX = 8
+
+
+def sc_attention_bits_ok(bits: int | None) -> bool:
+    return bits is None or SC_ATTN_BITS_MIN <= bits <= SC_ATTN_BITS_MAX
+
+
+class _QuantRows(NamedTuple):
+    sign: jax.Array     # int32 in {+1, -1}
+    mag: jax.Array      # int32 in [0, 2**bits)
+    scale: jax.Array    # f32, last axis kept as size 1
+
+
+def sc_quant_rows(v: jax.Array, bits: int) -> _QuantRows:
+    """Per-row (last axis) abs-max sign-magnitude quantization.
+
+    Operation-for-operation the ``axis=-1`` case of
+    ``core.sc_numerics.quantize_sign_magnitude`` (signs widened to int32 —
+    TPU kernels prefer full lanes; the values are identical).
+    """
+    v = v.astype(jnp.float32)
+    n_max = stream_length(bits) - 1
+    absmax = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12).astype(jnp.float32) / n_max
+    mag = jnp.clip(jnp.round(jnp.abs(v) / scale), 0, n_max).astype(jnp.int32)
+    sign = jnp.where(v < 0, -1, 1).astype(jnp.int32)
+    return _QuantRows(sign=sign, mag=mag, scale=scale)
+
+
+def sc_popcount(x: jax.Array, y: jax.Array, bits: int) -> jax.Array:
+    """``popcount(X_u AND Y_u)`` in closed form — the paper's multiplier.
+
+    Identical to ``core.multipliers.proposed_closed_form`` but raw (no jit
+    wrapper), so it traces inside Pallas kernel bodies. ``O(0, y) = 0``
+    exactly: the ``(x - msb) // 2`` floor goes to −1 and the clamp zeroes
+    it — the property that makes masked/padded rows exact no-ops.
+    """
+    half = stream_length(bits) // 2
+    x = x.astype(jnp.int32)
+    y = y.astype(jnp.int32)
+    msb = (y >= half).astype(jnp.int32)
+    y_low = y - msb * half
+    tail = jnp.maximum(jnp.minimum(y_low, (x - msb) // 2), 0)
+    return msb * (x // 2) + tail
+
+
+def sc_scores(q: jax.Array, k: jax.Array, *, bits: int) -> jax.Array:
+    """SC QK^T: ``q (..., Q, D)`` × ``k (..., K, D)`` → f32 ``(..., Q, K)``.
+
+    Leading dims broadcast (size-1 dims on either side are fine). Quantizes
+    both operands per row, contracts the integer planes with the popcount
+    multiplier (int32-exact: |counts| ≤ D·(N−1) < 2²⁴), and dequantizes with
+    the factorized outer-product scale ``N · Δq[i] · Δk[j]``. The caller
+    applies the attention scale / softcap / mask on the f32 result exactly
+    as on the float path.
+    """
+    qq = sc_quant_rows(q, bits)
+    qk = sc_quant_rows(k, bits)
+    o = sc_popcount(qq.mag[..., :, None, :], qk.mag[..., None, :, :], bits)
+    sgn = qq.sign[..., :, None, :] * qk.sign[..., None, :, :]
+    counts = jnp.sum(sgn * o, axis=-1, dtype=jnp.int32)       # (..., Q, K)
+    return counts.astype(jnp.float32) * (
+        stream_length(bits) * qq.scale * jnp.swapaxes(qk.scale, -1, -2))
+
+
+def sc_pv(p: jax.Array, v: jax.Array, *, bits: int) -> jax.Array:
+    """SC PV: probs ``p (..., K)`` × values ``v (..., K, D)`` → f32 ``(..., D)``.
+
+    The PV dequantization does *not* factorize (V scales are per row over
+    the key axis), so the O-term stays elementwise and the f32 reduction
+    runs over the non-minor key axis — a sequential vector-add loop whose
+    extra exact-``+0.0`` terms from masked rows cannot perturb the sum
+    (masked probs are exact zeros → zero magnitudes → ``O = 0`` → int-zero
+    terms, which cast to ``+0.0``). That is the page/extent-invariance
+    argument for decode: contiguous, gathered, and in-kernel layouts reduce
+    the same non-zero terms in the same order.
+    """
+    qp = sc_quant_rows(p, bits)                                # over K
+    qv = sc_quant_rows(v, bits)                                # over D
+    o = sc_popcount(qp.mag[..., :, None], qv.mag, bits)        # (..., K, D)
+    sgn = qp.sign[..., :, None] * qv.sign
+    term = (sgn * o).astype(jnp.float32) * qv.scale            # (..., K, D)
+    out = jnp.sum(term, axis=-2)                               # (..., D)
+    return out * (stream_length(bits) * qp.scale)

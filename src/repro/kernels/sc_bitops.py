@@ -33,10 +33,14 @@ def _thermo_word(x, w):
     """uint-style word w (bits j=0..31 ~ positions 32w+1 .. 32w+32) of the
     thermometer stream of x: ones at positions i <= x."""
     rem = jnp.clip(x - 32 * w, 0, 32)
-    # (1 << rem) - 1 without overflow at rem == 32:
+    # (1 << rem) - 1 without overflow at rem == 32. The shift amount must be
+    # clamped *before* the select: jnp.where evaluates both branches, and a
+    # shift by the full 32-bit width is undefined in XLA, so the unselected
+    # branch at rem == 32 would poison the word on backends that don't
+    # happen to wrap.
     full = jnp.int32(-1)  # 0xFFFFFFFF
     return jnp.where(rem >= 32, full,
-                     (jnp.int32(1) << rem) - 1)
+                     (jnp.int32(1) << jnp.minimum(rem, 31)) - 1)
 
 
 def _correlation_word(y, w, bits):

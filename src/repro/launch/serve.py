@@ -105,6 +105,13 @@ def main() -> None:
                          "emulation of the paper's multiplier)")
     ap.add_argument("--sc-impl", choices=SC_IMPLS, default=None,
                     help="SC-GEMM kernel (overrides the config's sc_impl)")
+    ap.add_argument("--attn-sc", action="store_true",
+                    help="route attention's QK^T/PV contractions through the "
+                         "SC popcount path (DESIGN.md §13) at the config's "
+                         "sc_bits width")
+    ap.add_argument("--attn-sc-bits", type=int, default=None,
+                    help="operand bit width for --attn-sc (overrides the "
+                         "config's sc_bits; 2..8)")
     ap.add_argument("--paged-attn", choices=("auto", "jnp", "pallas_tuned"),
                     default=None,
                     help="paged decode-attention dispatch (DESIGN.md §9; "
@@ -149,6 +156,12 @@ def main() -> None:
         import dataclasses
         cfg = dataclasses.replace(cfg,
                                   paged_attn_kernel=args.paged_attn).validate()
+    if args.attn_sc or args.attn_sc_bits is not None:
+        import dataclasses
+        over = {"attn_sc": True}
+        if args.attn_sc_bits is not None:
+            over["sc_bits"] = args.attn_sc_bits
+        cfg = dataclasses.replace(cfg, **over).validate()
     m = bind(cfg)
     params = m.init_params(jax.random.PRNGKey(0))
 

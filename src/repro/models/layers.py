@@ -17,6 +17,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.sc_attention import sc_attention_bits_ok, sc_pv, sc_scores
+
 __all__ = ["rms_norm", "rope", "apply_rope", "apply_mrope", "flash_attention",
            "decode_attention", "paged_decode_attention", "PagedKV", "softcap"]
 
@@ -87,41 +89,50 @@ class _FlashCarry(NamedTuple):
 def _flash_kernel_eligible(sq: int, skv: int, d: int, *, causal: bool,
                            window: int | None,
                            logit_softcap: float | None,
-                           bf16_probs: bool) -> bool:
+                           bf16_probs: bool,
+                           sc_bits: int | None = None) -> bool:
     """Shapes/features the fused Pallas flash kernel can serve: plain causal
     self-attention on MXU-aligned extents. ``bf16_probs`` disqualifies — the
     kernel keeps fp32 probs, and silently mixing prob precisions across a
-    model's layers would change training numerics."""
+    model's layers would change training numerics. The SC score path shares
+    the float envelope (its contraction swaps; the masking/softmax shell is
+    the same) but requires a supported operand width."""
     return (causal and window is None and logit_softcap is None
-            and not bf16_probs
+            and not bf16_probs and sc_attention_bits_ok(sc_bits)
             and sq == skv and sq % 128 == 0 and d % 128 == 0)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _flash_kernel_call(q: jax.Array, k: jax.Array, v: jax.Array,
                        q_block: int, kv_block: int,
-                       skip_masked_blocks: bool) -> jax.Array:
+                       skip_masked_blocks: bool,
+                       sc_bits: int | None = None) -> jax.Array:
     """Tuned Pallas flash forward in layer layout (B, S, H, D).
 
     The kernel is forward-only (no backward Mosaic kernel yet), so gradients
     recompute through the jnp online-softmax formulation below — the same
     math, so this is a true VJP, not an STE. ``q_block/kv_block`` and
     ``skip_masked_blocks`` configure that recompute (the triangular-skip
-    schedule matters in the backward too).
+    schedule matters in the backward too). For ``sc_bits`` the recompute
+    routes through the jnp SC branch; the quantization steps are
+    round/clip, so the VJP is piecewise-constant like any quantized path.
     """
     from repro.kernels.ops import flash_attention_tuned
     out = flash_attention_tuned(q.transpose(0, 2, 1, 3),
                                 k.transpose(0, 2, 1, 3),
-                                v.transpose(0, 2, 1, 3), causal=True)
+                                v.transpose(0, 2, 1, 3), causal=True,
+                                sc_bits=sc_bits)
     return out.transpose(0, 2, 1, 3)
 
 
-def _flash_kernel_call_fwd(q, k, v, q_block, kv_block, skip_masked_blocks):
+def _flash_kernel_call_fwd(q, k, v, q_block, kv_block, skip_masked_blocks,
+                           sc_bits):
     return (_flash_kernel_call(q, k, v, q_block, kv_block,
-                               skip_masked_blocks), (q, k, v))
+                               skip_masked_blocks, sc_bits), (q, k, v))
 
 
-def _flash_kernel_call_bwd(q_block, kv_block, skip_masked_blocks, res, g):
+def _flash_kernel_call_bwd(q_block, kv_block, skip_masked_blocks, sc_bits,
+                           res, g):
     q, k, v = res
     b, s = q.shape[:2]
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -131,7 +142,7 @@ def _flash_kernel_call_bwd(q_block, kv_block, skip_masked_blocks, res, g):
                                causal=True, q_block=q_block,
                                kv_block=kv_block,
                                skip_masked_blocks=skip_masked_blocks,
-                               kernel_impl="jnp")
+                               kernel_impl="jnp", sc_bits=sc_bits)
 
     _, vjp = jax.vjp(ref, q, k, v)
     return vjp(g)
@@ -148,7 +159,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     skip_masked_blocks: bool = False,
                     bf16_probs: bool = False,
                     kernel_impl: str = "auto",
-                    canonical_positions: bool = False) -> jax.Array:
+                    canonical_positions: bool = False,
+                    sc_bits: int | None = None) -> jax.Array:
     """Blocked online-softmax attention with grouped (GQA) einsums.
 
     ``q: (B, Sq, H, D)``; ``k, v: (B, Skv, KV, D)`` with ``H % KV == 0``.
@@ -172,21 +184,30 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``q_positions``/``kv_positions``, so it only engages when the caller
     declares ``canonical_positions=True`` — with the default False, packed /
     restarted position layouts always take the position-aware jnp path.
+
+    ``sc_bits`` routes the QK^T and PV contractions through the SC popcount
+    path (DESIGN.md §13) in both the kernel and the jnp formulation; per-row
+    quantization keeps batched SC attention bit-identical to sequential.
     """
     b, sq, h, d = q.shape
     _, skv, kv_heads, _ = k.shape
 
     if kernel_impl not in ("auto", "jnp", "pallas_tuned"):
         raise ValueError(f"unknown attention kernel_impl {kernel_impl!r}")
+    if sc_bits is not None:
+        # the SC PV is already a quantized contraction with an f32 running
+        # state; a second bf16 squeeze on probs would change the quantizer's
+        # inputs for no traffic win (probs never hit HBM on the SC path)
+        bf16_probs = False
     eligible = canonical_positions and _flash_kernel_eligible(
         sq, skv, d, causal=causal, window=window,
-        logit_softcap=logit_softcap, bf16_probs=bf16_probs)
+        logit_softcap=logit_softcap, bf16_probs=bf16_probs, sc_bits=sc_bits)
     use_kernel = (kernel_impl == "pallas_tuned" and eligible) or (
         kernel_impl == "auto" and eligible
         and jax.default_backend() == "tpu")
     if use_kernel:
         return _flash_kernel_call(q, k, v, q_block, kv_block,
-                                  skip_masked_blocks)
+                                  skip_masked_blocks, sc_bits)
     g = h // kv_heads
     scale = d ** -0.5
 
@@ -214,8 +235,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     def make_kv_step(qb, qp):
         def kv_step(carry: _FlashCarry, ki):
             kb, vb, kp = k_blocks[ki], v_blocks[ki], kpos_blocks[ki]
-            s = jnp.einsum("bqcgd,bkcd->bcgqk", qb, kb,
-                           preferred_element_type=jnp.float32) * scale
+            if sc_bits is not None:
+                # SC QK^T (DESIGN.md §13): per-row quantized popcount
+                # contraction; padded/masked rows quantize independently and
+                # their masked scores underflow to exact zeros downstream.
+                q_al = qb.transpose(0, 2, 3, 1, 4)          # (b, c, g, qb, d)
+                k_al = kb.transpose(0, 2, 1, 3)[:, :, None]  # (b, c, 1, kb, d)
+                s = sc_scores(q_al, k_al, bits=sc_bits) * scale
+            else:
+                s = jnp.einsum("bqcgd,bkcd->bcgqk", qb, kb,
+                               preferred_element_type=jnp.float32) * scale
             s = softcap(s, logit_softcap)
             mask = jnp.ones((b, q_block, kv_block), bool)
             if causal:
@@ -231,11 +260,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 # §Perf: probs in bf16 for the PV matmul — halves the
                 # score-chain HBM bytes; sums stay f32 (flash-attention
                 # standard practice)
+                # repro-lint: disable=R5 -- deliberate §Perf bf16 squeeze; accumulation stays f32 via preferred_element_type
                 pv = jnp.einsum("bcgqk,bkcd->bcgqd", p.astype(jnp.bfloat16),
+                                # repro-lint: disable=R5 -- deliberate §Perf bf16 squeeze; accumulation stays f32
                                 vb.astype(jnp.bfloat16),
                                 preferred_element_type=jnp.float32)
+            elif sc_bits is not None:
+                # SC PV: value rows aligned (b, c, 1, 1, kb, d) against the
+                # block-local unnormalized probs (b, c, g, qb, kb)
+                v_al = vb.astype(jnp.float32).transpose(
+                    0, 2, 1, 3)[:, :, None, None]
+                pv = sc_pv(p, v_al, bits=sc_bits)            # (b, c, g, qb, d)
             else:
-                pv = jnp.einsum("bcgqk,bkcd->bcgqd", p, vb.astype(jnp.float32))
+                pv = jnp.einsum("bcgqk,bkcd->bcgqd", p,
+                                vb.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
             o_new = carry.o * alpha[..., None] + pv
             return _FlashCarry(m_new, l_new, o_new), None
         return kv_step
@@ -307,7 +346,8 @@ def _gather_pages(pages: jax.Array, tables: jax.Array) -> jax.Array:
 def _paged_kernel_eligible(g: int, d: int, block: int,
                            logit_softcap: float | None,
                            interpret: bool, *, kv: int = 2,
-                           max_blocks: int = 1) -> bool:
+                           max_blocks: int = 1,
+                           sc_bits: int | None = None) -> bool:
     """Layouts the fused paged kernel serves *bit-identically* to the
     gathered-dense path (kernels/paged_attention.py): GQA head grouping
     (g ≥ 2, per-page score tiles) and — via the whole-row finish einsum —
@@ -319,21 +359,29 @@ def _paged_kernel_eligible(g: int, d: int, block: int,
     full-MHA has no kvh ≥ 2 split, and a whole-row scratch too big for
     the VMEM budget (huge ``max_blocks · block``) has no valid candidate;
     either way the dispatch must fall back to the gather rather than let
-    the tuner raise mid-trace."""
-    if logit_softcap is not None:
+    the tuner raise mid-trace.
+
+    The SC variant (``sc_bits``) widens the envelope: its popcount
+    contraction has no einsum lowering sensitivity, so every head layout —
+    including single-KV-head full-MHA — stays bit-identical and the
+    candidate grid keeps ``kvh = 1``. Softcap remains out (same tanh-fusion
+    drift as the float path)."""
+    if logit_softcap is not None or not sc_attention_bits_ok(sc_bits):
         return False
     if not (interpret or (d % 128 == 0 and block % 8 == 0)):
         return False
     from repro.kernels.autotune import candidate_paged_configs
     return bool(candidate_paged_configs(kv, g, d, block=block,
-                                        max_blocks=max_blocks))
+                                        max_blocks=max_blocks,
+                                        sc=sc_bits is not None))
 
 
 def paged_decode_attention(q: jax.Array, paged: PagedKV, *,
                            q_position: jax.Array,
                            window: int | None = None,
                            logit_softcap: float | None = None,
-                           kernel_impl: str = "auto") -> jax.Array:
+                           kernel_impl: str = "auto",
+                           sc_bits: int | None = None) -> jax.Array:
     """Single-step attention straight against the paged KV pool.
 
     ``q: (C, 1, H, D)``; ``paged`` holds this site's page pools and block
@@ -356,7 +404,8 @@ def paged_decode_attention(q: jax.Array, paged: PagedKV, *,
     interpret = default_interpret()
     eligible = _paged_kernel_eligible(g, d, paged.block, logit_softcap,
                                       interpret, kv=kv,
-                                      max_blocks=paged.tables.shape[1])
+                                      max_blocks=paged.tables.shape[1],
+                                      sc_bits=sc_bits)
     use_kernel = (kernel_impl == "pallas_tuned" and eligible) or (
         kernel_impl == "auto" and eligible
         and jax.default_backend() == "tpu")
@@ -364,30 +413,40 @@ def paged_decode_attention(q: jax.Array, paged: PagedKV, *,
         from repro.kernels.ops import paged_decode_attention_tuned
         out = paged_decode_attention_tuned(
             q[:, 0].reshape(c, kv, g, d), paged.k, paged.v, paged.tables,
-            q_position, window=window, logit_softcap=logit_softcap)
+            q_position, window=window, logit_softcap=logit_softcap,
+            sc_bits=sc_bits)
         return out.reshape(c, 1, h, d)
     return decode_attention(q, _gather_pages(paged.k, paged.tables),
                             _gather_pages(paged.v, paged.tables),
                             q_position=q_position, window=window,
-                            logit_softcap=logit_softcap)
+                            logit_softcap=logit_softcap, sc_bits=sc_bits)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                      q_position: jax.Array, window: int | None = None,
-                     logit_softcap: float | None = None) -> jax.Array:
+                     logit_softcap: float | None = None,
+                     sc_bits: int | None = None) -> jax.Array:
     """Single-step attention against a (possibly partially filled) KV cache.
 
     ``q: (B, 1, H, D)``; ``k_cache, v_cache: (B, S, KV, D)``;
     ``q_position: (B,)`` absolute position of the new token. Cache slots at
-    positions > q_position are masked (unfilled future slots).
+    positions > q_position are masked (unfilled future slots). ``sc_bits``
+    switches the score/PV contractions to the SC popcount path; per-row
+    quantization and exact-zero masked terms keep the result invariant to
+    the cache extent and batch composition (DESIGN.md §13).
     """
     b, _, h, d = q.shape
     _, s, kv_heads, _ = k_cache.shape
     g = h // kv_heads
     scale = d ** -0.5
     qg = q.reshape(b, 1, kv_heads, g, d)
-    scores = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k_cache,
-                        preferred_element_type=jnp.float32) * scale
+    if sc_bits is not None:
+        q_al = qg.transpose(0, 2, 3, 1, 4)               # (b, c, g, 1, d)
+        k_al = k_cache.transpose(0, 2, 1, 3)[:, :, None]  # (b, c, 1, S, d)
+        scores = sc_scores(q_al, k_al, bits=sc_bits) * scale
+    else:
+        scores = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k_cache,
+                            preferred_element_type=jnp.float32) * scale
     scores = softcap(scores, logit_softcap)
     kpos = jnp.arange(s)[None, :]                       # (1, S)
     mask = kpos <= q_position[:, None]
@@ -395,6 +454,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
         mask &= (q_position[:, None] - kpos) < window
     scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
-    out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v_cache.astype(jnp.float32))
+    if sc_bits is not None:
+        # value rows aligned (b, c, 1, 1, S, d) against p (b, c, g, 1, S) —
+        # the same operand alignment the fused paged kernel's finish uses
+        v_al = v_cache.astype(jnp.float32).transpose(
+            0, 2, 1, 3)[:, :, None, None]
+        out = sc_pv(p, v_al, bits=sc_bits)               # (b, c, g, 1, d)
+    else:
+        out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v_cache.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, d)
     return out.astype(q.dtype)

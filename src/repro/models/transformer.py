@@ -135,6 +135,9 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                   canonical_positions: bool = True) -> tuple[jax.Array, tuple | None]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # one resolution point for every attention call below, so the prefill,
+    # dense-decode, and paged-decode paths can never disagree on the numeric
+    attn_sc_bits = cfg.sc_bits if cfg.attn_sc else None
 
     def proj(w, bias):
         # (d, heads, hd) is a matmul with the head axes flattened; route it
@@ -178,7 +181,8 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
         out = paged_decode_attention(q, new_paged, q_position=cache_pos,
                                      window=window,
                                      logit_softcap=cfg.attn_softcap,
-                                     kernel_impl=cfg.paged_attn_kernel)
+                                     kernel_impl=cfg.paged_attn_kernel,
+                                     sc_bits=attn_sc_bits)
         new_cache = new_paged
     elif cache is not None and cache != "collect":
         k_cache, v_cache = cache
@@ -208,7 +212,7 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                 logit_softcap=cfg.attn_softcap, q_block=min(cfg.q_block, s),
                 kv_block=min(cfg.kv_block, e), skip_masked_blocks=False,
                 bf16_probs=cfg.bf16_probs, kernel_impl=cfg.attn_kernel,
-                canonical_positions=False)
+                canonical_positions=False, sc_bits=attn_sc_bits)
         else:
             # decode: write this token's K/V at each sequence's own position.
             # ``cache_pos: (B,)`` — per-sequence absolute positions, so
@@ -224,7 +228,8 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
             v_cache = v_cache.at[batch_idx, cache_pos].set(v[:, 0], mode="drop")
             out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
                                    window=window,
-                                   logit_softcap=cfg.attn_softcap)
+                                   logit_softcap=cfg.attn_softcap,
+                                   sc_bits=attn_sc_bits)
         new_cache = (k_cache, v_cache)
     else:
         if cfg.attn_kv_gather:
@@ -241,7 +246,7 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
             q_block=min(cfg.q_block, s), kv_block=min(cfg.kv_block, s),
             skip_masked_blocks=cfg.skip_masked_blocks,
             bf16_probs=cfg.bf16_probs, kernel_impl=cfg.attn_kernel,
-            canonical_positions=canonical_positions)
+            canonical_positions=canonical_positions, sc_bits=attn_sc_bits)
         new_cache = (k, v) if cache == "collect" else None
 
     o = sc_proj(out.reshape(b, s, h * hd), p["wo"].reshape(h * hd, d), cfg)

@@ -1,0 +1,443 @@
+"""SC-native attention (DESIGN.md §13) + the kernel-entry regressions that
+rode along in the same PR.
+
+Equality levels, strongest claim first:
+
+* the raw helpers in ``kernels/sc_attention.py`` vs the ref.py oracles
+  built on the canonical core ops — integer planes (sign/mag/popcounts)
+  **bitwise**, f32 dequant to 1 ulp (the jitted core quantizer's scale
+  division fuses differently from the eagerly-traced helper's — same
+  math, different XLA fusion);
+* the fused paged kernel under SC vs the gathered-dense SC decode —
+  **bitwise** (shared helpers, same operand alignment), including the
+  layouts the float kernel cannot serve (single-KV-head full-MHA);
+* engine streams with ``attn_sc`` on vs the sequential per-request SC
+  baseline — **bitwise** (the batch-composition invariance the per-row
+  quantization exists for);
+* the Pallas flash kernel / jnp flash under SC vs the plain-softmax SC
+  oracle — allclose only: online softmax quantizes block-local
+  unnormalized probs, the oracle quantizes the normalized row.
+
+Plus regressions for the latent bugs fixed at the kernel entries: the
+thermometer word's undefined shift at the 32-bit boundary, typed
+``ConfigError`` on non-divisible extents, and the empty-operand early
+return in ``sc_stream_mul``.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.errors import ConfigError
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.sc_attention import (sc_attention_bits_ok, sc_pv,
+                                        sc_scores)
+from repro.kernels.sc_bitops import _thermo_word
+from repro.launch.serve import generate
+from repro.models.layers import (_flash_kernel_eligible,
+                                 _paged_kernel_eligible, decode_attention,
+                                 flash_attention)
+from repro.serving import Engine, Request
+
+BITS = (4, 6, 8)
+
+
+def _rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# --------------------------------------------- raw helpers vs core oracles
+
+@pytest.mark.parametrize("bits", BITS)
+def test_sc_quant_planes_bitwise_vs_core(bits):
+    """The raw helper's quantization planes == the canonical core
+    quantizer's, bit for bit — the integer datapath is one formulation in
+    two codebases."""
+    from repro.core.sc_numerics import quantize_sign_magnitude
+    from repro.kernels.sc_attention import sc_popcount, sc_quant_rows
+
+    v = _rand(bits, (2, 5, 16))
+    raw = sc_quant_rows(v, bits)
+    core = quantize_sign_magnitude(v, bits=bits, axis=-1)
+    np.testing.assert_array_equal(np.asarray(raw.mag), np.asarray(core.mag))
+    np.testing.assert_array_equal(np.asarray(raw.sign),
+                                  np.asarray(core.sign).astype(np.int32))
+    # same math; the jitted core fuses the scale division differently — 1 ulp
+    np.testing.assert_allclose(np.asarray(raw.scale),
+                               np.asarray(core.scale), rtol=2e-7)
+    from repro.core.multipliers import proposed_closed_form
+    x = jnp.arange(1 << bits, dtype=jnp.int32)
+    xx, yy = jnp.meshgrid(x, x, indexing="ij")
+    np.testing.assert_array_equal(
+        np.asarray(sc_popcount(xx, yy, bits)),
+        np.asarray(proposed_closed_form(xx, yy, bits=bits)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_sc_scores_matches_oracle(bits):
+    q = _rand(bits, (2, 3, 5, 16))
+    k = _rand(bits + 100, (2, 3, 7, 16))
+    np.testing.assert_allclose(
+        np.asarray(sc_scores(q, k, bits=bits)),
+        np.asarray(ref.sc_attention_scores_ref(q, k, bits=bits)),
+        rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_sc_pv_matches_oracle(bits):
+    p = jax.nn.softmax(_rand(bits, (2, 3, 5, 7)), axis=-1)
+    v = _rand(bits + 200, (2, 3, 1, 7, 16))
+    np.testing.assert_allclose(
+        np.asarray(sc_pv(p, v, bits=bits)),
+        np.asarray(ref.sc_attention_pv_ref(p, v, bits=bits)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_sc_scores_zero_magnitude_contributes_exact_zero():
+    """O(0, y) = 0 for every y — the property the whole §13 invariance
+    story rests on: a zero row's scores are exact +0.0 regardless of what
+    garbage sits on the other side."""
+    q = jnp.zeros((1, 2, 16))
+    k = _rand(3, (1, 5, 16)) * 100.0
+    s = np.asarray(sc_scores(q, k, bits=8))
+    assert np.all(s == 0.0)
+    assert not np.any(np.signbit(s)), "must be +0.0, never -0.0"
+
+
+# ------------------------------------------------- Pallas flash SC kernel
+
+@pytest.mark.parametrize("b,h,kv", [(1, 2, 2), (1, 4, 2), (1, 4, 1)])
+@pytest.mark.parametrize("bits", BITS)
+def test_flash_kernel_sc_matches_oracle(b, h, kv, bits):
+    """MHA / GQA / MQA: the fused kernel's SC path vs the plain-softmax SC
+    oracle. Tolerance scales with the operand grid: the two quantize probs
+    at different points (block-local unnormalized vs normalized row), a
+    one-step mag difference at most."""
+    sq = skv = 128
+    d = 128
+    q = _rand(b * 7 + h, (b, h, sq, d))
+    k = _rand(b * 7 + h + 1, (b, kv, skv, d))
+    v = _rand(b * 7 + h + 2, (b, kv, skv, d))
+    out = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True, sc_bits=bits)
+    expected = ref.sc_flash_attention_ref(q, k, v, bits=bits, causal=True)
+    tol = 8.0 / (2 ** bits - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=0, atol=tol)
+
+
+def test_flash_kernel_sc_converges_to_exact_with_bits():
+    """More operand bits -> closer to exact attention: the SC path is the
+    paper's multiplier, not an unrelated approximation."""
+    q = _rand(11, (1, 2, 128, 128))
+    k = _rand(12, (1, 2, 128, 128))
+    v = _rand(13, (1, 2, 128, 128))
+    exact = np.asarray(ref.flash_attention_ref(q, k, v, causal=True))
+    errs = [np.abs(np.asarray(flash_attention_pallas(
+        q, k, v, causal=True, bq=128, bk=128, interpret=True,
+        sc_bits=bits)) - exact).mean() for bits in (2, 4, 8)]
+    # monotone in bits; the floor is the multiplier's intrinsic bias, so no
+    # geometric-shrink claim — the per-bits MAD trajectory lives in the
+    # serving bench row (core.error_analysis.sc_attention_divergence)
+    assert errs[0] > errs[1] > errs[2]
+
+
+# --------------------------------------------------- jnp flash / decode SC
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("h,kv", [(4, 2), (4, 4)])
+def test_jnp_flash_sc_matches_oracle(bits, h, kv):
+    b, s, d = 2, 24, 16
+    q = _rand(bits + h, (b, s, h, d))
+    k = _rand(bits + h + 1, (b, s, kv, d))
+    v = _rand(bits + h + 2, (b, s, kv, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    out = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                          causal=True, q_block=8, kv_block=8,
+                          kernel_impl="jnp", sc_bits=bits)
+    expected = ref.sc_flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), bits=bits, causal=True).transpose(0, 2, 1, 3)
+    # blocked online softmax quantizes p per kv block (block-local absmax)
+    # vs the oracle's whole row: different integer grids into an
+    # *approximate* multiplier, so the per-element deviation floor is the
+    # multiplier's intrinsic error (bits-independent), with a bits-scaled
+    # quantization term on top of the mean
+    diff = np.abs(np.asarray(out) - np.asarray(expected))
+    assert diff.max() < 0.35
+    assert diff.mean() < 0.05
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("window", [None, 6])
+def test_decode_sc_matches_oracle(bits, window):
+    """Both quantize the *normalized* softmax row over the full cache
+    extent — the layouts agree, only ulp-level jit-fusion noise between the
+    raw helpers and the jitted core quantizer separates them."""
+    b, s, h, kv, d = 3, 12, 4, 2, 16
+    q = _rand(bits, (b, 1, h, d))
+    kc = _rand(bits + 1, (b, s, kv, d))
+    vc = _rand(bits + 2, (b, s, kv, d))
+    pos = jnp.asarray([3, 7, 11], jnp.int32)
+    out = decode_attention(q, kc, vc, q_position=pos, window=window,
+                           sc_bits=bits)
+    expected = ref.sc_decode_attention_ref(q, kc, vc, q_position=pos,
+                                           bits=bits, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=0, atol=2.0 / (2 ** bits - 1))
+
+
+def test_decode_sc_extent_invariant():
+    """Growing the cache with garbage rows beyond the masked horizon adds
+    only exact-zero terms: masked probs are exact f32 zeros and
+    O(0, y) = 0 kills their PV terms. The *terms* are identical; XLA may
+    chunk the longer reduction differently, so the outputs agree to 1 ulp
+    (the engine's stream identity — the real contract — is bitwise and
+    tested below, because a 1-ulp logit drift doesn't move an argmax)."""
+    b, h, kv, d = 2, 4, 2, 16
+    kc = _rand(1, (b, 48, kv, d))
+    vc = _rand(2, (b, 48, kv, d))
+    q = _rand(3, (b, 1, h, d))
+    pos = jnp.asarray([40, 47], jnp.int32)
+    garbage_k = 1e3 * _rand(4, (b, 16, kv, d))
+    garbage_v = 1e3 * _rand(5, (b, 16, kv, d))
+    out48 = decode_attention(q, kc, vc, q_position=pos, sc_bits=8)
+    out64 = decode_attention(q, jnp.concatenate([kc, garbage_k], axis=1),
+                             jnp.concatenate([vc, garbage_v], axis=1),
+                             q_position=pos, sc_bits=8)
+    np.testing.assert_allclose(np.asarray(out48), np.asarray(out64),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_decode_sc_batch_invariant():
+    """Per-row quantization scales couple nothing across the batch: a row
+    decoded alone equals the same row decoded co-batched, to the bit."""
+    b, s, h, kv, d = 3, 10, 4, 2, 16
+    q = _rand(7, (b, 1, h, d))
+    kc = _rand(8, (b, s, kv, d))
+    vc = _rand(9, (b, s, kv, d))
+    pos = jnp.asarray([4, 9, 6], jnp.int32)
+    batched = np.asarray(decode_attention(q, kc, vc, q_position=pos,
+                                          sc_bits=6))
+    for i in range(b):
+        solo = decode_attention(q[i:i + 1], kc[i:i + 1], vc[i:i + 1],
+                                q_position=pos[i:i + 1], sc_bits=6)
+        np.testing.assert_array_equal(np.asarray(solo), batched[i:i + 1])
+
+
+# -------------------------------------------------- fused paged SC kernel
+
+PAGED_GEOMETRIES = [
+    # (c, h, kv, d, mb, block, window, kvh)
+    (3, 4, 2, 16, 4, 4, None, 1),     # fragmented GQA, sc keeps kvh = 1
+    (2, 4, 2, 16, 3, 4, 6, 2),        # sliding window straddling pages
+    (2, 4, 4, 16, 3, 4, None, 2),     # full-MHA (g = 1) under SC
+    (2, 4, 1, 16, 4, 4, None, 1),     # single-KV-head full-MHA: SC-only
+]
+
+
+def _paged_problem(seed, *, c, h, kv, d, mb, block):
+    rng = np.random.default_rng(seed)
+    n_pages = c * mb + 2
+    kp = jnp.asarray(rng.standard_normal((n_pages, block, kv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, block, kv, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((c, 1, h, d)), jnp.float32)
+    perm = rng.permutation(n_pages - 1)
+    tables = np.full((c, mb), -1, np.int32)
+    pos = np.zeros(c, np.int32)
+    at = 0
+    for i in range(c):
+        n = int(rng.integers(1, mb + 1))
+        tables[i, :n] = perm[at:at + n]
+        at += n
+        pos[i] = rng.integers((n - 1) * block, n * block)
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(pos)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "sc_bits"))
+def _dense_sc_reference(q, kp, vp, tables, pos, window, sc_bits):
+    """Jitted like the engine's baseline decode step — the bitwise claim
+    compares two jit-compiled consumers of the shared helpers (eager
+    op-by-op tracing rounds the quantizer's scale division differently)."""
+    c, mb = tables.shape
+    block = kp.shape[1]
+    safe = jnp.where(tables < 0, kp.shape[0] - 1, tables)
+    kc = kp[safe].reshape(c, mb * block, *kp.shape[2:])
+    vc = vp[safe].reshape(c, mb * block, *vp.shape[2:])
+    return decode_attention(q, kc, vc, q_position=pos, window=window,
+                            sc_bits=sc_bits)
+
+
+@pytest.mark.parametrize("c,h,kv,d,mb,block,window,kvh", PAGED_GEOMETRIES)
+@pytest.mark.parametrize("bits", BITS)
+def test_paged_kernel_sc_bitwise_vs_gathered_dense(c, h, kv, d, mb, block,
+                                                   window, kvh, bits):
+    """The §9 contract extended to §13: the in-kernel table walk under SC
+    reproduces the gathered-dense SC decode exactly — including the
+    single-KV-head full-MHA layout the float kernel must refuse."""
+    q, kp, vp, tables, pos = _paged_problem(c * 37 + mb + bits, c=c, h=h,
+                                            kv=kv, d=d, mb=mb, block=block)
+    g = h // kv
+    out = paged_attention_pallas(q[:, 0].reshape(c, kv, g, d), kp, vp,
+                                 tables, pos, window=window, kvh=kvh,
+                                 interpret=True, sc_bits=bits)
+    expected = _dense_sc_reference(q, kp, vp, tables, pos, window, bits)
+    np.testing.assert_array_equal(np.asarray(out.reshape(c, 1, h, d)),
+                                  np.asarray(expected))
+
+
+# -------------------------------------------------------- eligibility gates
+
+def test_sc_bits_gate_flash_eligibility():
+    ok = dict(causal=True, window=None, logit_softcap=None, bf16_probs=False)
+    assert _flash_kernel_eligible(128, 128, 128, **ok, sc_bits=8)
+    assert not _flash_kernel_eligible(128, 128, 128, **ok, sc_bits=1)
+    assert not _flash_kernel_eligible(128, 128, 128, **ok, sc_bits=9)
+    assert sc_attention_bits_ok(None) and sc_attention_bits_ok(2)
+    assert not sc_attention_bits_ok(16)
+
+
+def test_sc_widens_paged_envelope_but_not_softcap():
+    """Single-KV-head full-MHA: no float candidates (the einsum-lowering
+    restriction), but the SC grid keeps kvh = 1. Softcap stays out of both
+    envelopes."""
+    common = dict(interpret=True, kv=1, max_blocks=4)
+    assert not _paged_kernel_eligible(1, 16, 4, None, **common)
+    assert _paged_kernel_eligible(1, 16, 4, None, **common, sc_bits=8)
+    assert not _paged_kernel_eligible(1, 16, 4, 30.0, **common, sc_bits=8)
+
+
+def test_autotune_keys_carry_sc_segment():
+    """Cache schema v5: the SC variant tunes its own bucket — a float
+    entry must never serve a popcount-contraction call or vice versa."""
+    from repro.kernels.autotune import AutotuneCache
+    fk = AutotuneCache.flash_key(1, 4, 2, 256, 256, 128, causal=True)
+    fk_sc = AutotuneCache.flash_key(1, 4, 2, 256, 256, 128, causal=True,
+                                    sc_bits=8)
+    pk = AutotuneCache.paged_key(2, 4, 2, 16, 4, 4, None, False)
+    pk_sc = AutotuneCache.paged_key(2, 4, 2, 16, 4, 4, None, False,
+                                    sc_bits=6)
+    assert fk != fk_sc and fk.endswith(":sc0") and fk_sc.endswith(":sc8")
+    assert pk != pk_sc and pk.endswith(":sc0") and pk_sc.endswith(":sc6")
+
+
+# ----------------------------------------- engine streams: SC == sequential
+
+def _sc_cfg(**kw):
+    base = dict(name="sc-attn", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=128, dtype="float32", q_block=16, kv_block=16,
+                loss_chunk=16, remat=False, attn_sc=True, sc_bits=8)
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+@pytest.mark.parametrize("cfg", [
+    _sc_cfg(),
+    _sc_cfg(name="sc-attn-fused", paged_attn_kernel="pallas_tuned"),
+], ids=lambda c: c.name)
+def test_engine_sc_streams_bit_identical_to_sequential(cfg):
+    """The headline §13 invariant: with attn_sc on, continuous batching
+    over the paged pool (gathered and forced-fused-kernel decode both)
+    reproduces the sequential per-request SC baseline token-for-token —
+    the SC score path preserves the engine's exactness story."""
+    from repro.models import bind
+    params = bind(cfg).init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+               for _ in range(3)]
+    gens = [3, 5, 2]
+    baseline = [np.asarray(generate(cfg, params, jnp.asarray(p)[None],
+                                    gen_tokens=gn))[0]
+                for p, gn in zip(prompts, gens)]
+    engine = Engine(cfg, params, capacity=2, max_seq=8 + max(gens), block=4)
+    results = engine.run([Request(uid=f"r{i}", prompt=p, max_new_tokens=gn)
+                          for i, (p, gn) in enumerate(zip(prompts, gens))])
+    for res, expect in zip(results, baseline):
+        np.testing.assert_array_equal(res.tokens, expect,
+                                      err_msg=f"{cfg.name}/{res.uid}")
+
+
+def test_attn_sc_off_matches_pre_sc_code_path():
+    """Default config: attn_sc off resolves sc_bits=None everywhere — the
+    exact float path, byte-identical dispatch to the pre-§13 code."""
+    cfg = _sc_cfg(name="sc-attn-off", attn_sc=False)
+    from repro.models import bind
+    params = bind(cfg).init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    on = _sc_cfg()
+    base_off = np.asarray(generate(cfg, params, jnp.asarray(prompt)[None],
+                                   gen_tokens=4))[0]
+    base_on = np.asarray(generate(on, params, jnp.asarray(prompt)[None],
+                                  gen_tokens=4))[0]
+    assert base_off.shape == base_on.shape  # both decode; numerics differ
+
+
+def test_attn_sc_validates_bits():
+    with pytest.raises(AssertionError, match="attn_sc"):
+        _sc_cfg(sc_bits=12)
+
+
+# ------------------------------------------------ kernel-entry regressions
+
+def test_flash_entry_rejects_non_multiple_extents():
+    """Regression: the grid floors Sq//bq — a ragged extent used to leave
+    tail rows as uninitialized garbage; now it's a typed ConfigError."""
+    q = jnp.zeros((1, 2, 100, 128), jnp.float32)
+    k = jnp.zeros((1, 2, 128, 128), jnp.float32)
+    with pytest.raises(ConfigError, match="Sq % bq"):
+        flash_attention_pallas(q, k, k, causal=True, bq=128, bk=128,
+                               interpret=True)
+    with pytest.raises(ConfigError, match="Skv % bk"):
+        flash_attention_pallas(
+            jnp.zeros((1, 2, 128, 128), jnp.float32),
+            jnp.zeros((1, 2, 100, 128), jnp.float32),
+            jnp.zeros((1, 2, 100, 128), jnp.float32),
+            causal=True, bq=128, bk=128, interpret=True)
+
+
+def test_paged_entry_rejects_bad_kvh():
+    q, kp, vp, tables, pos = _paged_problem(1, c=2, h=4, kv=4, d=16, mb=2,
+                                            block=4)
+    with pytest.raises(ConfigError, match="kvh"):
+        paged_attention_pallas(q[:, 0].reshape(2, 4, 1, 16), kp, vp, tables,
+                               pos, kvh=3, interpret=True)
+    # float full-MHA needs kvh >= 2; the SC variant is exempt (covered
+    # bitwise above) — here just the typed refusal on the float path
+    with pytest.raises(ConfigError, match="kvh >= 2"):
+        paged_attention_pallas(q[:, 0].reshape(2, 4, 1, 16), kp, vp, tables,
+                               pos, kvh=1, interpret=True)
+
+
+def test_thermo_word_exact_at_32bit_boundary():
+    """Regression for the undefined shift: word w of the thermometer stream
+    at rem == 32 (x on a word boundary) must be all-ones — the unclamped
+    ``1 << 32`` in the unselected branch was UB that could poison it."""
+    for bits in (6, 7, 8):
+        n = 1 << bits
+        x = jnp.arange(n, dtype=jnp.int32)
+        xw_ref, _ = ref.sc_stream_words_ref(x, jnp.zeros_like(x), bits=bits)
+        for w in range(n // 32):
+            got = np.asarray(_thermo_word(x, w)).astype(np.uint32)
+            np.testing.assert_array_equal(
+                got, np.asarray(xw_ref[..., w]).astype(np.uint32),
+                err_msg=f"bits={bits} word={w}")
+    # the boundary case by name: x exactly at the end of word 0
+    assert int(np.asarray(_thermo_word(jnp.int32(32), 0)).view(np.uint32)) \
+        == 0xFFFFFFFF
+    assert int(np.asarray(_thermo_word(jnp.int32(31), 0))) == 0x7FFFFFFF
+
+
+def test_stream_mul_empty_operands():
+    """Regression: an empty operand used to reach pallas_call with
+    grid=(0,); now it returns the empty result directly."""
+    x = jnp.zeros((0,), jnp.int32)
+    out = ops.sc_stream_mul(x, x, bits=8, interpret=True)
+    assert out.shape == (0,) and out.dtype == jnp.int32
