@@ -60,6 +60,19 @@ path must keep the batch-composition invariance the engine's exactness
 story rests on), then records µs/token for both plus the per-bits
 output/score divergence of the SC path from ``sc_attention_divergence``.
 
+A gate-exempt marker row records the **self-speculative decoding A/B**
+(ISSUE 10 / DESIGN.md §14): a shared-prefix smoke workload served without
+speculation and with ``speculate_k`` draft tokens per round proposed by
+the SC popcount path and verified by one exact (k+1)-row window. The row
+hard-asserts that the speculative streams are bit-identical to the
+sequential per-request baseline (greedy acceptance emits only exact-path
+argmaxes, so speculation is a pure scheduling change) and that the draft
+actually earned something (``acceptance_rate > 0``), then records the
+tok/s speedup over the non-speculative engine plus the acceptance and
+draft/verify timing columns. The speedup is structural on CPU — the SC
+draft is *emulated* here, so the ratio reflects step-count savings, not
+the multiplier's silicon win.
+
 The workload is deterministic (fixed seeds, greedy sampling) and each mode
 is measured on its second run — the first run pays XLA compilation for the
 prefill/decode executables, which the compiled-step caches
@@ -158,7 +171,84 @@ def run(smoke: bool = False, arch: str = "smollm-360m") -> list[dict]:
                             max_gen))
     rows.append(_sc_attention_row(cfg, params, mesh, n, capacity, prompt_len,
                                   max_gen))
+    rows.append(_speculative_row(cfg, params, mesh, n, capacity, prompt_len,
+                                 max_gen))
     return rows
+
+
+def _speculative_row(cfg, params, mesh, n: int, capacity: int,
+                     prompt_len: int, max_gen: int) -> dict:
+    """Self-speculative decoding A/B marker (gate-exempt): the same
+    shared-prefix workload served without speculation and with a k-token
+    SC-drafted / exact-verified round (DESIGN.md §14). Hard-asserted: the
+    speculative streams reproduce the sequential per-request baseline
+    bit-for-bit (acceptance only reshuffles *when* exact tokens land, never
+    *which*), and the draft accepts at least one proposal. Timed on the
+    second run of each mode; the speedup column is step-count structure,
+    not a silicon claim — the SC draft is emulated on the host here."""
+    import jax.numpy as jnp
+
+    from repro.launch.serve import generate
+    from repro.serving import Engine, Request
+
+    k, bits = 3, 8
+    max_seq = prompt_len + max_gen
+    gen = max(max_gen // 2, 1)
+
+    def shaped(s):
+        return (s, cfg.n_codebooks) if cfg.n_codebooks else (s,)
+
+    def requests():
+        # shared preamble + divergent tails: the serve.py traffic shape,
+        # so speculation composes with the prefix cache in the measurement
+        rng = np.random.default_rng(29)
+        pre = rng.integers(0, cfg.vocab_size, size=shaped(prompt_len // 2),
+                           dtype=np.int32)
+        return [Request(uid=f"spec-{i}",
+                        prompt=np.concatenate(
+                            [pre, rng.integers(
+                                0, cfg.vocab_size,
+                                size=shaped(prompt_len - len(pre)),
+                                dtype=np.int32)]),
+                        max_new_tokens=gen)
+                for i in range(n)]
+
+    stats = {}
+    for label, spec_k in (("baseline", 0), ("spec", k)):
+        for _ in range(2):             # first run compiles, second times
+            engine = Engine(cfg, params, capacity=capacity, max_seq=max_seq,
+                            mesh=mesh, speculate_k=spec_k, draft_bits=bits)
+            results = engine.run(requests())
+        stats[label] = engine.stats
+        for req, res in zip(requests(), results):
+            baseline = np.asarray(generate(
+                cfg, params, jnp.asarray(req.prompt)[None],
+                gen_tokens=req.max_new_tokens))[0]
+            np.testing.assert_array_equal(
+                res.tokens, baseline,
+                err_msg=f"{label} engine stream diverged from its "
+                        f"sequential baseline at {res.uid}")
+    st = stats["spec"]
+    assert st["speculative"] and st["spec_rounds"] > 0
+    assert st["spec_acceptance_rate"] > 0, \
+        "SC draft never had a proposal accepted by exact verification"
+    speedup = st["tok_per_s"] / max(stats["baseline"]["tok_per_s"], 1e-9)
+    return {
+        "name": f"serving/speculative/{cfg.name}",
+        "us_per_call": 0.0,
+        "derived": (
+            f"speedup={speedup:.2f}x"
+            f" spec_us_per_tok={1e6 / st['tok_per_s']:.1f}"
+            f" base_us_per_tok={1e6 / stats['baseline']['tok_per_s']:.1f}"
+            f" k={k} draft_bits={bits}"
+            f" acceptance_rate={st['spec_acceptance_rate']:.2f}"
+            f" tok_per_round={st['spec_tokens_per_round']:.2f}"
+            f" rounds={st['spec_rounds']}"
+            f" base_decode_steps={stats['baseline']['decode_steps']}"
+            f" draft_us={st['spec_draft_us']:.0f}"
+            f" verify_us={st['spec_verify_us']:.0f}"
+            f" requests={n} capacity={capacity}"),
+    }
 
 
 def _sc_attention_row(cfg, params, mesh, n: int, capacity: int,

@@ -83,6 +83,13 @@ class ModelConfig:
     # forces the kernel on every eligible call regardless of backend
     # (interpret mode off TPU — used by the bit-identity tests).
     paged_attn_kernel: str = "auto"
+    # Self-speculative decoding (DESIGN.md §14): draft k tokens per round
+    # through the SC popcount path at ``draft_bits`` operand width (same
+    # weights, cheaper multiplier), verify on this config's exact path.
+    # 0 disables speculation. Greedy acceptance keeps streams bit-identical
+    # to the non-speculative engine, so these are pure throughput knobs.
+    speculate_k: int = 0
+    draft_bits: int = 4
 
     # --- execution
     remat: bool = True
@@ -129,6 +136,13 @@ class ModelConfig:
             assert sc_attention_bits_ok(self.sc_bits), (
                 f"{self.name}: attn_sc needs 2 <= sc_bits <= 8, "
                 f"got {self.sc_bits}")
+        assert self.speculate_k >= 0, (
+            f"{self.name}: speculate_k must be >= 0, got {self.speculate_k}")
+        if self.speculate_k:
+            from repro.kernels.sc_attention import sc_attention_bits_ok
+            assert sc_attention_bits_ok(self.draft_bits), (
+                f"{self.name}: speculative draft needs 2 <= draft_bits <= 8, "
+                f"got {self.draft_bits}")
         if self.family != "ssm":
             assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
         assert self.n_layers % self.group_size == 0, (

@@ -141,6 +141,16 @@ def main() -> None:
                     help="seed keying the radix tree's chained block hash; "
                          "streams are invariant to it (matches verify raw "
                          "tokens), it only permutes tree keys")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="self-speculative decoding (DESIGN.md §14): draft "
+                         "this many tokens per round through the SC popcount "
+                         "path, verify with one exact (k+1)-row window; "
+                         "greedy acceptance keeps streams bit-identical. "
+                         "0 disables. Requires paged layout, a transformer "
+                         "family, and temperature 0")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="SC operand width (2..8) for the speculative draft "
+                         "pass; lower is cheaper but accepts less")
     ap.add_argument("--stream", action="store_true",
                     help="drive the engine through per-request token "
                          "callbacks and print an SSE-style event feed as "
@@ -193,7 +203,9 @@ def main() -> None:
                     prefill_mode=args.prefill_mode, chunk=args.chunk,
                     prefill_budget=args.prefill_budget,
                     prefix_cache=args.prefix_cache,
-                    prefix_hash_seed=args.prefix_block_hash)
+                    prefix_hash_seed=args.prefix_block_hash,
+                    speculate_k=args.speculate_k,
+                    draft_bits=args.draft_bits)
     t0 = time.time()
     if args.stream:
         # SSE-style feed: one `data:` line per emitted token, as it lands
@@ -218,6 +230,12 @@ def main() -> None:
         pages += (f", prefix {st['prefix_hits']}/{st['prefix_hits'] + st['prefix_misses']}"
                   f" hits ({st['prefill_tokens_saved']} prefill tokens "
                   f"saved, {st['cow_copies']} CoW)")
+    if st.get("speculative"):
+        pages += (f", spec k={st['speculate_k']}@{st['draft_bits']}b: "
+                  f"{st['spec_acceptance_rate']:.0%} accepted, "
+                  f"{st['spec_tokens_per_round']:.2f} tok/round "
+                  f"(draft {st['spec_draft_us']:.0f}us "
+                  f"verify {st['spec_verify_us']:.0f}us)")
     print(f"[serve] {st['mode']}/{st['layout']}/{st['prefill_mode']}: "
           f"{st['requests']} requests, "
           f"{st['generated_tokens']} tokens in {dt:.1f}s "

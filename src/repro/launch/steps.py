@@ -1,4 +1,5 @@
-"""Jitted step builders shared by train.py, serve.py and dryrun.py.
+"""Jitted step builders shared by train.py, serve.py and dryrun.py
+(DESIGN.md §7–§10, §14 for the serving prefill/decode/draft/verify steps).
 
 Each builder returns ``(step_fn, in_shardings, out_shardings, donate)`` ready
 for ``jax.jit(...).lower(...)`` — the dry-run AOT-compiles exactly what the
@@ -24,8 +25,12 @@ from repro.parallel.sharding import (batch_pspecs, cache_pspecs, named,
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
            "build_paged_decode_step", "build_chunked_prefill_step",
+           "build_draft_loop_step", "build_verify_window_step",
+           "build_rollback_step",
            "cached_train_step", "cached_prefill_step", "cached_decode_step",
            "cached_paged_decode_step", "cached_chunked_prefill_step",
+           "cached_draft_loop_step", "cached_verify_window_step",
+           "cached_rollback_step",
            "prompt_buckets", "bucket_for", "abstract_params",
            "abstract_opt_state", "activation_spec", "opt_pspecs"]
 
@@ -259,6 +264,144 @@ def build_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
     return jitted, shardings, params_abs
 
 
+def _paged_shardings(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                     block: int, n_blocks: int):
+    """Shared paged-pool sharding derivation for the speculative builders:
+    (params sharding, pool sharding, tables sharding, params_abs)."""
+    from repro.models import cache_ops
+    m = bind(cfg)
+    params_abs = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, params_abs, mesh)
+    data_abs = jax.eval_shape(
+        lambda: cache_ops.paged_init(m.init_cache, capacity, n_blocks, block))
+    data_sh = named(mesh, paged_pool_pspecs(cfg, data_abs, mesh))
+    tables_sh = NamedSharding(mesh, paged_tables_pspec(mesh))
+    return named(mesh, p_specs), data_sh, tables_sh, params_abs
+
+
+def _token_grid_sharding(mesh: Mesh, capacity: int, width: int):
+    """Sharding of a ``(capacity, width)`` int32 token grid (draft
+    proposals / verify argmaxes): batch over the data axes."""
+    from repro.parallel.sharding import fit_spec
+    data = _data_axes(mesh)
+    return NamedSharding(mesh, fit_spec(P(data, None), (capacity, width),
+                                        mesh))
+
+
+def build_draft_loop_step(draft_cfg: ModelConfig, mesh: Mesh, *,
+                          capacity: int, block: int, n_blocks: int,
+                          max_blocks: int, k: int):
+    """The speculative *draft* step (DESIGN.md §14): ``k`` fused paged
+    decode sub-steps at the draft config's low-``sc_bits`` numeric, chained
+    by on-device argmax, in one executable. Signature:
+    ``draft(params, data, tables, batch) -> (tokens, data)`` with
+    ``batch["tokens"]: (capacity, 1)`` each slot's last sampled token and
+    ``tokens: (capacity, k)`` the greedy draft proposals.
+
+    ``draft_cfg`` is the engine config with the SC numeric forced on at the
+    draft width (same architecture, same params pytree — *self*-speculation:
+    the cheap model is the same weights through the paper's multiplier).
+    Draft K/V rows land in the pool at ``[pos, pos + k)`` via the fused
+    in-layer scatter, but the returned cache's ``pos`` is **restored to its
+    entry value**: the draft writes are scratch that the verify step
+    overwrites with exact-path K/V, and a clean base position is what lets
+    commit/rollback reason about the window uniformly. Greedy chaining
+    (temperature 0) is deliberate — it maximizes the accepted prefix under
+    the greedy acceptance rule.
+    """
+    m = bind(draft_cfg)
+
+    def draft(params, data, tables, batch):
+        p0 = data.pos
+        toks = batch["tokens"]
+        out = []
+        for _ in range(k):
+            logits, data = m.paged_decode_step(params, data, tables,
+                                               {"tokens": toks})
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out.append(nxt)
+            toks = nxt[:, None]
+        return jnp.stack(out, axis=1), data._replace(pos=p0)
+
+    p_sh, data_sh, tables_sh, params_abs = _paged_shardings(
+        draft_cfg, mesh, capacity=capacity, block=block, n_blocks=n_blocks)
+    shardings = {
+        "params": p_sh,
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(draft_cfg, batch,
+                                                           mesh)),
+        "cache": data_sh,
+        "tables": tables_sh,
+    }
+    jitted = jax.jit(draft, donate_argnums=(1,),
+                     out_shardings=(_token_grid_sharding(mesh, capacity, k),
+                                    data_sh))
+    return jitted, shardings, params_abs
+
+
+def build_verify_window_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                             block: int, n_blocks: int, max_blocks: int,
+                             width: int):
+    """The speculative *verify* step (DESIGN.md §14): one exact-path
+    ``width``-row decode window over every slot, committed to pages.
+    Signature: ``verify(params, data, tables, batch) -> (tokens, data)``
+    with ``batch["tokens"]: (capacity, width)`` — each slot's last sampled
+    token followed by its ``width - 1`` draft proposals — and ``tokens:
+    (capacity, width)`` the exact greedy argmax after each row (row ``i``
+    is what ``i + 1`` sequential decode steps would have sampled).
+
+    Gather → ``decode_window_step`` → ``paged_commit_window`` in one jit,
+    mirroring the ``fused=False`` paged decode (its gather/commit pair is
+    the §8 bit-identity reference); the argmax reduces on device so the
+    host pulls a ``(capacity, width)`` int32 grid, never the logits. All
+    ``width`` K/V rows commit unconditionally — the engine's acceptance
+    pass rewinds rejected suffixes with the rollback step.
+    """
+    from repro.models import cache_ops
+    m = bind(cfg)
+
+    def verify(params, data, tables, batch):
+        dense = cache_ops.paged_gather(data, tables, block=block)
+        logits, dense2 = m.decode_window_step(params, dense, batch)
+        data2 = cache_ops.paged_commit_window(data, dense2, tables,
+                                              block=block, width=width)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), data2
+
+    p_sh, data_sh, tables_sh, params_abs = _paged_shardings(
+        cfg, mesh, capacity=capacity, block=block, n_blocks=n_blocks)
+    shardings = {
+        "params": p_sh,
+        "batch_fn": lambda batch: named(mesh, batch_pspecs(cfg, batch, mesh)),
+        "cache": data_sh,
+        "tables": tables_sh,
+    }
+    jitted = jax.jit(
+        verify, donate_argnums=(1,),
+        out_shardings=(_token_grid_sharding(mesh, capacity, width), data_sh))
+    return jitted, shardings, params_abs
+
+
+def build_rollback_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                        block: int, n_blocks: int, max_blocks: int,
+                        width: int):
+    """The speculative *rollback* step (DESIGN.md §14): rewind each slot's
+    committed ``width``-token window to its accepted prefix. Signature:
+    ``rollback(data, tables, accept) -> data`` with ``accept: (capacity,)``
+    int32 accepted-token counts (0 for free slots). Positions rewind to
+    ``pos - width + accept`` and the rejected suffix's page cells are
+    zeroed (``cache_ops.paged_rollback``)."""
+    from repro.models import cache_ops
+
+    def rollback(data, tables, accept):
+        return cache_ops.paged_rollback(data, tables, block=block,
+                                        width=width, accept=accept)
+
+    p_sh, data_sh, tables_sh, params_abs = _paged_shardings(
+        cfg, mesh, capacity=capacity, block=block, n_blocks=n_blocks)
+    shardings = {"cache": data_sh, "tables": tables_sh}
+    jitted = jax.jit(rollback, donate_argnums=(0,), out_shardings=data_sh)
+    return jitted, shardings, params_abs
+
+
 def prompt_buckets(max_seq: int, chunk: int) -> tuple[int, ...]:
     """The padded prompt-length set for chunked prefill: powers-of-two
     multiples of ``chunk`` (pow2-style, mirroring ``kernels.autotune``'s
@@ -378,3 +521,37 @@ def cached_paged_decode_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
     return build_paged_decode_step(cfg, mesh, capacity=capacity, block=block,
                                    n_blocks=n_blocks, max_blocks=max_blocks,
                                    fused=fused)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_draft_loop_step(draft_cfg: ModelConfig, mesh: Mesh, *,
+                           capacity: int, block: int, n_blocks: int,
+                           max_blocks: int, k: int):
+    """Memoized on (draft_cfg, mesh, pool shape, k): engines speculating at
+    the same draft width share one k-substep executable."""
+    return build_draft_loop_step(draft_cfg, mesh, capacity=capacity,
+                                 block=block, n_blocks=n_blocks,
+                                 max_blocks=max_blocks, k=k)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_verify_window_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                              block: int, n_blocks: int, max_blocks: int,
+                              width: int):
+    """Memoized per (cfg, mesh, pool shape, width = k + 1): one verify
+    executable per speculative window size (the per-(family, k) compile
+    the tentpole names)."""
+    return build_verify_window_step(cfg, mesh, capacity=capacity,
+                                    block=block, n_blocks=n_blocks,
+                                    max_blocks=max_blocks, width=width)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_rollback_step(cfg: ModelConfig, mesh: Mesh, *, capacity: int,
+                         block: int, n_blocks: int, max_blocks: int,
+                         width: int):
+    """Memoized per (cfg, mesh, pool shape, width) like the verify step it
+    pairs with."""
+    return build_rollback_step(cfg, mesh, capacity=capacity, block=block,
+                               n_blocks=n_blocks, max_blocks=max_blocks,
+                               width=width)

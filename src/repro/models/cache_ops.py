@@ -54,6 +54,7 @@ from repro.errors import CacheLayoutError, ConfigError
 
 __all__ = ["slot_insert", "slot_read", "slot_evict", "slot_positions",
            "truncate_seq", "paged_init", "paged_gather", "paged_commit",
+           "paged_commit_window", "paged_rollback",
            "paged_insert", "paged_evict", "paged_read", "paged_token_entry",
            "paged_copy_page", "paged_zero_pages", "prefix_seed",
            "SLOT_AXIS", "SEQ_FIELDS"]
@@ -239,14 +240,18 @@ def paged_token_entry(tables: jax.Array, pos, *, block: int
     (``models.layers.PagedKV`` decode paths) so the two write paths can
     never disagree. The entry is the *raw* table value — callers redirect
     negatives (free slots, whose drifted positions must land in the trash
-    block) with their leaf's trash index. The page index is clipped into
-    the table like the gather view clips its extent, so a drifted free
-    slot's cell is always in-bounds.
+    block) with their leaf's trash index. A position outside the table's
+    logical extent — negative, or at/past ``max_blocks * block`` (a
+    speculative draft overshooting a slot's last page) — resolves to ``-1``
+    so the same trash redirect absorbs it instead of wrapping onto a live
+    page.
     """
     capacity, max_blocks = tables.shape
     pos = jnp.asarray(pos, jnp.int32)
-    page_ix = jnp.clip(pos // block, 0, max_blocks - 1)
+    raw_ix = pos // block
+    page_ix = jnp.clip(raw_ix, 0, max_blocks - 1)
     entry = jnp.take_along_axis(tables, page_ix[:, None], axis=1)[:, 0]
+    entry = jnp.where((raw_ix < 0) | (raw_ix >= max_blocks), -1, entry)
     return entry, pos % block
 
 
@@ -276,6 +281,79 @@ def paged_commit(data: Any, dense: Any, tables: jax.Array, *,
         return pl.at[:, bid, off].set(token.astype(pl.dtype))
 
     return jax.tree_util.tree_map_with_path(one, data, dense)
+
+
+def paged_commit_window(data: Any, dense: Any, tables: jax.Array, *,
+                        block: int, width: int) -> Any:
+    """Fold a ``width``-token verify step's updates back into pages.
+
+    The windowed generalization of :func:`paged_commit` for speculative
+    verification (DESIGN.md §14): a ``decode_window_step`` writes ``width``
+    fresh K/V rows per slot at positions ``[pos, pos + width)`` of the dense
+    view (``pos`` = ``data.pos``, the *pre-step* positions — ``dense.pos``
+    has already advanced by ``width``). Each of the ``width`` columns
+    resolves its page cell through :func:`paged_token_entry`, so the write
+    path stays the single shared derivation; cells whose position falls on
+    an unallocated or out-of-range page land in the trash block. All slots
+    commit the full window unconditionally — the engine's rollback pass
+    (:func:`paged_rollback`) zeroes whatever verification rejects, and free
+    slots' windows land in trash (their tables are all ``-1``).
+    """
+    capacity, _ = tables.shape
+    base = jnp.asarray(data.pos, jnp.int32)               # pre-step positions
+    cols = [paged_token_entry(tables, base + i, block=block)
+            for i in range(width)]
+    entry = jnp.stack([e for e, _ in cols], axis=1)       # (C, W)
+    off = jnp.stack([o for _, o in cols], axis=1)         # (C, W)
+    rows = jnp.arange(capacity)
+    wpos = base[:, None] + jnp.arange(width)[None, :]     # (C, W)
+
+    def one(path, pl, dl):
+        if _is_pos(path) or not _is_seq(path):
+            return dl
+        bid = jnp.where(entry < 0, _trash(pl), entry)     # (C, W)
+        col = jnp.minimum(wpos, dl.shape[2] - 1)
+        token = dl[:, rows[:, None], col]                 # (lead, C, W, *tail)
+        return pl.at[:, bid, off].set(token.astype(pl.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, data, dense)
+
+
+def paged_rollback(data: Any, tables: jax.Array, *, block: int, width: int,
+                   accept: jax.Array) -> Any:
+    """Rewind a ``width``-token speculative window to its accepted prefix.
+
+    After a verify step committed ``width`` tokens per slot (positions
+    ``[base, base + width)`` with ``base = pos - width``), the engine keeps
+    only ``accept[slot]`` of them (DESIGN.md §14): positions are rewound to
+    ``base + accept`` and the K/V cells of the rejected suffix — ``width``
+    cells from the new position, a deliberate overshoot past the dirty span
+    — are zeroed. Overshoot is harmless: cells past a slot's dirty window
+    are either already zero (allocated-but-unwritten pages are zeroed by
+    ``paged_init`` / ``paged_evict`` / ``paged_zero_pages``) or resolve to
+    the trash block, so re-zeroing them preserves the pool-contents-are-a-
+    pure-function-of-live-state invariant rather than breaking it. Free
+    slots pass ``accept = 0``: their window committed to trash, so the
+    rewind restores their (drifted) ``pos`` and their zero-writes land in
+    trash again.
+    """
+    accept = jnp.asarray(accept, jnp.int32)
+    start = jnp.asarray(data.pos, jnp.int32) - width + accept  # (C,)
+    cols = [paged_token_entry(tables, start + i, block=block)
+            for i in range(width)]
+    entry = jnp.stack([e for e, _ in cols], axis=1)       # (C, W)
+    off = jnp.stack([o for _, o in cols], axis=1)         # (C, W)
+
+    def one(path, pl):
+        if _is_pos(path):
+            return start
+        if not _is_seq(path):
+            return pl
+        bid = jnp.where(entry < 0, _trash(pl), entry)     # (C, W)
+        zeros = jnp.zeros_like(pl[:, bid, off])
+        return pl.at[:, bid, off].set(zeros)
+
+    return jax.tree_util.tree_map_with_path(one, data)
 
 
 def paged_insert(data: Any, single: Any, slot: int,

@@ -426,42 +426,49 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                      q_position: jax.Array, window: int | None = None,
                      logit_softcap: float | None = None,
                      sc_bits: int | None = None) -> jax.Array:
-    """Single-step attention against a (possibly partially filled) KV cache.
+    """Decode-window attention against a (possibly partially filled) KV cache.
 
-    ``q: (B, 1, H, D)``; ``k_cache, v_cache: (B, S, KV, D)``;
-    ``q_position: (B,)`` absolute position of the new token. Cache slots at
-    positions > q_position are masked (unfilled future slots). ``sc_bits``
-    switches the score/PV contractions to the SC popcount path; per-row
-    quantization and exact-zero masked terms keep the result invariant to
-    the cache extent and batch composition (DESIGN.md §13).
+    ``q: (B, W, H, D)`` — W consecutive query rows per sequence (W = 1 for
+    the ordinary decode step; W = k + 1 for a speculative verify window,
+    DESIGN.md §14); ``k_cache, v_cache: (B, S, KV, D)``;
+    ``q_position: (B,)`` absolute position of the *first* query row (row i
+    sits at ``q_position + i``). Each row masks cache slots past its own
+    position (unfilled future slots, and the window's later rows), one
+    exact fp32 softmax per row — never an online-softmax rescale, which is
+    what keeps a W-row verify bit-comparable to W sequential single-row
+    steps (DESIGN.md §9's masking contract). ``sc_bits`` switches the
+    score/PV contractions to the SC popcount path; per-row quantization and
+    exact-zero masked terms keep the result invariant to the cache extent
+    and batch composition (DESIGN.md §13).
     """
-    b, _, h, d = q.shape
+    b, w, h, d = q.shape
     _, s, kv_heads, _ = k_cache.shape
     g = h // kv_heads
     scale = d ** -0.5
-    qg = q.reshape(b, 1, kv_heads, g, d)
+    qg = q.reshape(b, w, kv_heads, g, d)
     if sc_bits is not None:
-        q_al = qg.transpose(0, 2, 3, 1, 4)               # (b, c, g, 1, d)
+        q_al = qg.transpose(0, 2, 3, 1, 4)               # (b, c, g, W, d)
         k_al = k_cache.transpose(0, 2, 1, 3)[:, :, None]  # (b, c, 1, S, d)
         scores = sc_scores(q_al, k_al, bits=sc_bits) * scale
     else:
         scores = jnp.einsum("bqcgd,bkcd->bcgqk", qg, k_cache,
                             preferred_element_type=jnp.float32) * scale
     scores = softcap(scores, logit_softcap)
-    kpos = jnp.arange(s)[None, :]                       # (1, S)
-    mask = kpos <= q_position[:, None]
+    kpos = jnp.arange(s)[None, None, :]                 # (1, 1, S)
+    row_pos = q_position[:, None] + jnp.arange(w)[None, :]       # (B, W)
+    mask = kpos <= row_pos[:, :, None]                  # (B, W, S)
     if window is not None:
-        mask &= (q_position[:, None] - kpos) < window
-    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        mask &= (row_pos[:, :, None] - kpos) < window
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     if sc_bits is not None:
-        # value rows aligned (b, c, 1, 1, S, d) against p (b, c, g, 1, S) —
+        # value rows aligned (b, c, 1, 1, S, d) against p (b, c, g, W, S) —
         # the same operand alignment the fused paged kernel's finish uses
         v_al = v_cache.astype(jnp.float32).transpose(
             0, 2, 1, 3)[:, :, None, None]
-        out = sc_pv(p, v_al, bits=sc_bits)               # (b, c, g, 1, d)
+        out = sc_pv(p, v_al, bits=sc_bits)               # (b, c, g, W, d)
     else:
         out = jnp.einsum("bcgqk,bkcd->bcgqd", p, v_cache.astype(jnp.float32),
                          preferred_element_type=jnp.float32)
-    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, d)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, w, h, d)
     return out.astype(q.dtype)

@@ -9,6 +9,7 @@
 from __future__ import annotations
 
 from repro.configs.base import ModelConfig
+from repro.errors import ConfigError
 from . import cache_ops, ssm_lm, transformer, zamba2
 
 __all__ = ["bind"]
@@ -57,6 +58,20 @@ class BoundModel:
         sequence leaves the paged layout is the slot layout."""
         return self._mod.paged_decode_step(params, self.cfg, cache, tables,
                                            batch)
+
+    def decode_window_step(self, params, cache, batch):
+        """Exact-path verification window (DESIGN.md §14): advance every
+        sequence by ``W = batch["tokens"].shape[1]`` consecutive tokens in
+        one forward, returning per-row logits ``(B, W, V)`` where row ``i``
+        is the exact next-token distribution after consuming rows
+        ``0..i``. Transformer families only — the recurrent families
+        (ssm/hybrid) cannot rewind their O(1) state, so the engine gates
+        speculation off for them."""
+        if self.cfg.family not in _TRANSFORMER_FAMILIES:
+            raise ConfigError(
+                f"decode_window_step needs a transformer family (recurrent "
+                f"state cannot roll back), got {self.cfg.family!r}")
+        return self._mod.decode_window_step(params, self.cfg, cache, batch)
 
     def prefill_step(self, params, batch, *, extra_slots: int = 0):
         return self._mod.prefill_step(params, self.cfg, batch,

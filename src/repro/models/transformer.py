@@ -31,7 +31,8 @@ from .layers import (PagedKV, apply_mrope, apply_rope, decode_attention,
 from .moe import init_moe_params, moe_ffn
 
 __all__ = ["init_params", "forward_hidden", "loss_fn", "init_kv_cache",
-           "decode_step", "paged_decode_step", "logits_from_hidden"]
+           "decode_step", "paged_decode_step", "decode_window_step",
+           "logits_from_hidden"]
 
 
 def _dtype(cfg: ModelConfig):
@@ -132,7 +133,8 @@ def _project(x, w, cfg, b=None):
 def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
                   window: int | None, positions, mrope_positions,
                   cache: tuple | None, cache_pos,
-                  canonical_positions: bool = True) -> tuple[jax.Array, tuple | None]:
+                  canonical_positions: bool = True,
+                  decode_window: bool = False) -> tuple[jax.Array, tuple | None]:
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     # one resolution point for every attention call below, so the prefill,
@@ -187,7 +189,24 @@ def _attn_forward(p: dict, x: jax.Array, cfg: ModelConfig, *,
     elif cache is not None and cache != "collect":
         k_cache, v_cache = cache
         cache_pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
-        if s > 1:
+        if decode_window:
+            # speculative verify (DESIGN.md §14): scatter the whole
+            # ``s``-row window's K/V at each slot's own positions
+            # ``[pos, pos + s)`` — a per-slot generalization of the one-row
+            # decode scatter below, with the same mode="drop" semantics for
+            # free slots whose drifted window leaves the cache view — then
+            # run the W-row exact-softmax decode attention. Never the flash
+            # path: its online softmax re-rounds, and verification's whole
+            # point is matching the sequential decode numerics row-for-row.
+            batch_idx = jnp.arange(b)[:, None]
+            wpos = cache_pos[:, None] + jnp.arange(s)[None, :]
+            k_cache = k_cache.at[batch_idx, wpos].set(k, mode="drop")
+            v_cache = v_cache.at[batch_idx, wpos].set(v, mode="drop")
+            out = decode_attention(q, k_cache, v_cache, q_position=cache_pos,
+                                   window=window,
+                                   logit_softcap=cfg.attn_softcap,
+                                   sc_bits=attn_sc_bits)
+        elif s > 1:
             # chunked prefill: scatter a whole chunk's K/V at the shared
             # per-batch offset (the staging cache is B=1; all rows sit at the
             # same position) and flash-attend with *absolute* positions —
@@ -261,13 +280,14 @@ def _mlp_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 
 def _layer_forward(layer: dict, x: jax.Array, cfg: ModelConfig, pos: int, *,
                    positions, mrope_positions, cache, cache_pos,
-                   canonical_positions: bool = True):
+                   canonical_positions: bool = True,
+                   decode_window: bool = False):
     window = cfg.window_at(pos)
     attn_in = rms_norm(x, layer["ln1"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
     attn_out, new_cache = _attn_forward(
         layer["attn"], attn_in, cfg, window=window, positions=positions,
         mrope_positions=mrope_positions, cache=cache, cache_pos=cache_pos,
-        canonical_positions=canonical_positions)
+        canonical_positions=canonical_positions, decode_window=decode_window)
     if cfg.post_norms:
         attn_out = rms_norm(attn_out, layer["ln1_post"], eps=cfg.norm_eps,
                             plus_one=cfg.norm_plus_one)
@@ -552,3 +572,52 @@ def paged_decode_step(params: dict, cfg: ModelConfig, cache: KVCache,
     """
     return _run_decode(params, cfg, cache, batch,
                        lambda k, v: PagedKV(k, v, tables))
+
+
+def decode_window_step(params: dict, cfg: ModelConfig, cache: KVCache,
+                       batch: dict) -> tuple[jax.Array, KVCache]:
+    """``W`` consecutive tokens for every sequence in one forward — the
+    exact-path verification step of speculative decoding (DESIGN.md §14).
+
+    ``batch["tokens"]: (B, W)`` holds each sequence's last sampled token
+    followed by its ``W - 1`` draft proposals; rows enter at positions
+    ``[cache.pos, cache.pos + W)``. Row ``i`` of the returned logits
+    ``(B, W, V)`` is the exact model's next-token distribution after
+    consuming rows ``0..i`` — each row causally masks the window's later
+    rows through the per-row position mask, and every row gets its own
+    exact fp32 softmax (never an online-softmax carry), so row ``i``
+    matches what ``i + 1`` sequential :func:`decode_step` calls would
+    produce on the same prefix. K/V for all ``W`` rows is written at the
+    absolute positions; the engine commits the window to pages and then
+    rewinds whatever verification rejects (``cache_ops.paged_rollback``).
+    """
+    x = _embed_tokens(params, cfg, batch)
+    b, w, _ = x.shape
+    pos = jnp.broadcast_to(cache.pos, (b,))
+    positions = pos[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.mrope_sections is not None and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[None],
+                                           (3, b, w)).astype(jnp.int32)
+
+    gsz = cfg.group_size
+
+    def group_body(x, inputs):
+        group_params = inputs["params"]
+        new_k, new_v = [], []
+        for p in range(gsz):
+            x, kvc, _ = _layer_forward(
+                group_params[p], x, cfg, p,
+                positions=positions, mrope_positions=mrope_positions,
+                cache=(inputs["k"][p], inputs["v"][p]), cache_pos=pos,
+                decode_window=True)
+            new_k.append(kvc[0])
+            new_v.append(kvc[1])
+        return x, (tuple(new_k), tuple(new_v))
+
+    x, (ks, vs) = jax.lax.scan(
+        group_body, x,
+        {"params": params["layers"], "k": cache.k, "v": cache.v})
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    logits = logits_from_hidden(params, cfg, x)
+    return logits, KVCache(k=ks, v=vs, pos=pos + w)

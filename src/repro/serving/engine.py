@@ -1,4 +1,4 @@
-"""Continuous-batching serving engine (DESIGN.md §7–§10).
+"""Continuous-batching serving engine (DESIGN.md §7–§10, §12, §14).
 
 The engine is a **step scheduler**: one public :meth:`Engine.step` advances
 the whole pool by one scheduling quantum — a bounded budget of
@@ -42,6 +42,12 @@ just loops over it.
   tokens are *streamed* — pushed through per-request ``on_token``
   callbacks the moment they exist, or pulled through the
   :meth:`Engine.stream` generator, which drives ``step()`` on demand.
+* *Speculate (opt-in)*: with ``speculate_k > 0`` the decode step becomes a
+  draft → verify → rollback round (DESIGN.md §14): k cheap SC-numeric
+  decode sub-steps at ``draft_bits`` propose tokens, one exact (k+1)-row
+  verify window checks them, and greedy acceptance emits the longest
+  exactly-matching prefix plus one exact token — so each round yields
+  1..k+1 tokens of the *same* bit-identical stream.
 * *Evict*: a request leaves on EOS or length; its slot (and pages) free on
   the same step.
 
@@ -68,8 +74,10 @@ from jax.sharding import Mesh
 
 from repro.errors import ConfigError, EngineInvariantError
 from repro.launch.steps import (bucket_for, cached_chunked_prefill_step,
-                                cached_decode_step, cached_paged_decode_step,
-                                cached_prefill_step, prompt_buckets)
+                                cached_decode_step, cached_draft_loop_step,
+                                cached_paged_decode_step, cached_prefill_step,
+                                cached_rollback_step,
+                                cached_verify_window_step, prompt_buckets)
 from repro.models import bind, cache_ops
 
 from .prefix import PrefixCache, PrefixMatch
@@ -149,7 +157,9 @@ class Engine:
                  n_blocks: int | None = None, fused: bool = True,
                  prefill_mode: str = "chunked", chunk: int = 16,
                  prefill_budget: int | None = None,
-                 prefix_cache: bool = True, prefix_hash_seed: int = 0):
+                 prefix_cache: bool = True, prefix_hash_seed: int = 0,
+                 speculate_k: int | None = None,
+                 draft_bits: int | None = None):
         cfg.validate()
         if prefill_mode not in ("chunked", "oneshot"):
             raise ConfigError(f"unknown prefill_mode {prefill_mode!r}")
@@ -160,6 +170,30 @@ class Engine:
         self.paged = paged
         self.fused = fused and paged
         self.prefill_mode = prefill_mode
+        self.speculate_k = (cfg.speculate_k if speculate_k is None
+                            else speculate_k)
+        self.draft_bits = cfg.draft_bits if draft_bits is None else draft_bits
+        if self.speculate_k:
+            # DESIGN.md §14 gating: the draft's scratch K/V and the verify
+            # window's rollback both live in the paged pool, and only the
+            # attention families have state that *can* rewind (recurrent
+            # ssm/hybrid state advances irreversibly); codebook heads
+            # (musicgen) would need per-codebook acceptance.
+            if not paged:
+                raise ConfigError(
+                    "speculative decoding requires the paged layout "
+                    "(rollback rewinds page cells)")
+            if cfg.family in ("ssm", "hybrid") or cfg.n_codebooks:
+                raise ConfigError(
+                    f"speculative decoding needs a transformer family "
+                    f"without codebooks (recurrent state cannot roll back), "
+                    f"got family={cfg.family!r} "
+                    f"n_codebooks={cfg.n_codebooks}")
+            from repro.kernels.sc_attention import sc_attention_bits_ok
+            if not sc_attention_bits_ok(self.draft_bits):
+                raise ConfigError(
+                    f"speculative draft needs 2 <= draft_bits <= 8, "
+                    f"got {self.draft_bits}")
         if cfg.family in ("ssm", "hybrid"):
             chunk = -(-chunk // cfg.ssm_chunk) * cfg.ssm_chunk
         self.chunk = chunk
@@ -181,6 +215,29 @@ class Engine:
                 cfg, self.mesh, capacity=capacity, block=block,
                 n_blocks=n_blocks, max_blocks=max_blocks, fused=self.fused)
             self._params = jax.device_put(params, shardings["params"])
+            if self.speculate_k:
+                # self-speculation (DESIGN.md §14): the draft model is the
+                # *same weights* with the SC numeric forced on at the draft
+                # width — the paper's multiplier as the cheap proposer. One
+                # draft executable (k fused sub-steps), one exact verify
+                # window (k + 1 rows), one rollback, all per pool shape.
+                import dataclasses
+                draft_cfg = dataclasses.replace(
+                    cfg, use_sc_gemm=True, attn_sc=True,
+                    sc_bits=self.draft_bits).validate()
+                self.draft_cfg = draft_cfg
+                self._draft, _, _ = cached_draft_loop_step(
+                    draft_cfg, self.mesh, capacity=capacity, block=block,
+                    n_blocks=n_blocks, max_blocks=max_blocks,
+                    k=self.speculate_k)
+                self._verify, _, _ = cached_verify_window_step(
+                    cfg, self.mesh, capacity=capacity, block=block,
+                    n_blocks=n_blocks, max_blocks=max_blocks,
+                    width=self.speculate_k + 1)
+                self._rollback, _, _ = cached_rollback_step(
+                    cfg, self.mesh, capacity=capacity, block=block,
+                    n_blocks=n_blocks, max_blocks=max_blocks,
+                    width=self.speculate_k + 1)
             data = jax.device_put(
                 cache_ops.paged_init(self._m.init_cache, capacity, n_blocks,
                                      block),
@@ -222,6 +279,12 @@ class Engine:
         self._n_prefix_hits = 0
         self._n_prefix_misses = 0
         self._prefill_tokens_saved = 0
+        self._n_spec_rounds = 0
+        self._spec_drafted = 0          # draft tokens proposed (live slots)
+        self._spec_draft_accepted = 0   # draft tokens verification kept
+        self._spec_emitted = 0          # tokens emitted by spec rounds
+        self._spec_draft_s = 0.0
+        self._spec_verify_s = 0.0
         self._backpressure: dict[str, list[dict]] = {"admission": [],
                                                      "decode": []}
 
@@ -232,6 +295,18 @@ class Engine:
         """Anything queued, staging, or live in a slot."""
         return (bool(self.queue) or bool(self.pool.entries)
                 or self._staging is not None)
+
+    def _check_request(self, req: Request) -> None:
+        """Fail-fast request admission checks: capacity fit, and — under
+        speculation — greedy sampling only, since the acceptance rule
+        compares exact argmax against draft argmax (DESIGN.md §14); a
+        sampled stream has no per-token right answer to accept against."""
+        self.pool.check_fits(req)
+        if self.speculate_k and req.temperature > 0:
+            raise ConfigError(
+                f"request {req.uid!r}: speculative decoding accepts greedy "
+                f"(temperature == 0) requests only, got "
+                f"temperature={req.temperature}")
 
     def _prefill_request(self, req: Request):
         """One-shot B=1 prefill through the cached sharded step for this
@@ -479,16 +554,27 @@ class Engine:
         events.append({"uid": uid, "pages_needed": pages_needed,
                        "pages_free": pages_free})
 
-    def _grow_pages(self) -> None:
-        """Allocate each live slot's next write page, preempting under
-        pressure. Slots are grown oldest-first so preemption (youngest
-        first) never starves the head of the line."""
+    def _grow_pages(self, width: int = 1) -> None:
+        """Allocate (and make writable) each live slot's next ``width``
+        write positions' pages, preempting under pressure. Slots are grown
+        oldest-first so preemption (youngest first) never starves the head
+        of the line. ``width > 1`` is the speculative window (DESIGN.md
+        §14): only positions a slot can still *keep* are ensured —
+        ``min(width, remaining)`` — the window's overshoot past a request's
+        budget lands in unallocated entries (→ trash block) and is zeroed
+        by rollback. The oldest slot alone always fits: its ensured span
+        ends at most at ``prompt + max_new - 1 ≤ max_seq - 1``, the
+        ``check_fits`` bound."""
         for slot in sorted(self.pool.entries,
                            key=lambda s: self.pool.entries[s].admit_index):
             while slot in self.pool.entries:
                 entry = self.pool.entries[slot]
+                n_keep = min(width, entry.request.max_new_tokens
+                             - entry.n_generated)
+                base = entry.next_write_pos
                 try:
-                    self.pool.ensure_page(slot, entry.next_write_pos)
+                    for i in range(n_keep):
+                        self.pool.ensure_page(slot, base + i)
                     break
                 except PoolExhausted as e:
                     self._note_backpressure(e.reason, e.uid,
@@ -517,6 +603,91 @@ class Engine:
                                        now - self._last_decode_end)
         self._last_decode_end = now
         return rows
+
+    def _speculate_once(self) -> None:
+        """One draft → verify → rollback round (DESIGN.md §14), emitting
+        1..k+1 exact tokens per live slot.
+
+        Protocol, per slot at write position ``p`` (last sampled token τ in
+        ``_tok_buf``, its K/V not yet written):
+
+        1. *Draft*: k fused SC-numeric decode sub-steps propose
+           ``d_1..d_k`` (greedy chain from τ), writing scratch K/V at
+           ``[p, p + k)``; the returned pool's positions are restored to
+           ``p``.
+        2. *Verify*: one exact (k+1)-row window over ``[τ, d_1..d_k]``
+           rewrites ``[p, p + k]`` with exact K/V (the window scatter fully
+           overwrites the draft scratch before any attention read, so
+           verification never sees draft numerics), commits all rows to
+           pages, and returns the per-row exact argmax ``e_0..e_k``.
+        3. *Accept* (host): j = longest prefix with ``e_i == d_{i+1}``;
+           emit ``e_0..e_j`` — j accepted draft tokens plus one exact
+           token that is the correction on first mismatch or the free
+           bonus row when all k matched — capped at the request's
+           remaining budget.
+        4. *Rollback* (device, **before** any eviction mutates the pool):
+           positions rewind to ``p + accepted`` and rejected cells are
+           zeroed. Free slots roll back their whole window (their writes
+           landed in the trash block), leaving zero net position drift.
+
+        Bit-identity is by construction: every emitted token is an *exact*
+        argmax over the same prefix the sequential baseline conditions on —
+        the draft only chooses how many exact tokens one round yields.
+        """
+        k = self.speculate_k
+        width = k + 1
+        self._grow_pages(width)
+        if not self.pool.entries:
+            return      # the window's growth preempted every slot but one,
+                        # then that one finished? unreachable, but be safe
+        tables = jnp.asarray(self.pool.tables)
+        t0 = time.perf_counter()
+        draft_toks, self.pool.cache = self._draft(
+            self._params, self.pool.cache, tables,
+            {"tokens": jnp.asarray(self._tok_buf)})
+        draft_host = np.asarray(jax.device_get(draft_toks))      # (C, k)
+        t1 = time.perf_counter()
+        window = np.concatenate([self._tok_buf, draft_host], axis=1)
+        exact_toks, self.pool.cache = self._verify(
+            self._params, self.pool.cache, tables,
+            {"tokens": jnp.asarray(window)})
+        exact_host = np.asarray(jax.device_get(exact_toks))      # (C, k+1)
+        t2 = time.perf_counter()
+        self._step += 1
+        self._n_spec_rounds += 1
+        self._spec_draft_s += t1 - t0
+        self._spec_verify_s += t2 - t1
+
+        accept = np.zeros((self.capacity,), np.int32)
+        emit_n: dict[int, int] = {}
+        for slot, entry in self.pool.entries.items():
+            j = 0
+            while j < k and exact_host[slot, j] == draft_host[slot, j]:
+                j += 1
+            remaining = entry.request.max_new_tokens - entry.n_generated
+            t = min(j + 1, remaining)
+            accept[slot] = t
+            emit_n[slot] = t
+            self._spec_drafted += k
+            self._spec_draft_accepted += min(j, t)
+            self._spec_emitted += t
+        # rollback BEFORE the emission loop: eviction (eos/length finish)
+        # resets a slot's positions and pages itself, and running it first
+        # would leave rollback rewinding a slot the pool already recycled
+        self.pool.cache = self._rollback(self.pool.cache, tables,
+                                         jnp.asarray(accept))
+        for slot in self.pool.active_slots:
+            entry = self.pool.entries[slot]
+            for i in range(emit_n[slot]):
+                self._emit(slot, entry, exact_host[slot, i])
+                if slot not in self.pool.entries:
+                    break       # finished (eos/length): drop the tail —
+                                # eviction already rewound its positions
+        now = time.perf_counter()
+        if self._last_decode_end is not None:
+            self._max_decode_gap = max(self._max_decode_gap,
+                                       now - self._last_decode_end)
+        self._last_decode_end = now
 
     # ------------------------------------------------------ the scheduler
 
@@ -578,10 +749,13 @@ class Engine:
                     f"(n_blocks={getattr(self.pool, 'n_blocks', None)})",
                     uid=self.queue.peek().uid)
             return self.has_work    # mid-prefill, or gang finished at admit
-        rows = self._decode_once()
-        for slot in self.pool.active_slots:
-            entry = self.pool.entries[slot]
-            self._emit(slot, entry, self._sample(entry, rows[slot]))
+        if self.speculate_k:
+            self._speculate_once()
+        else:
+            rows = self._decode_once()
+            for slot in self.pool.active_slots:
+                entry = self.pool.entries[slot]
+                self._emit(slot, entry, self._sample(entry, rows[slot]))
         return self.has_work
 
     # ------------------------------------------------- streaming surface
@@ -591,7 +765,7 @@ class Engine:
         """Queue a request; optional ``on_token`` receives every emitted
         token (including post-preemption replays) as decode steps land.
         Unfittable requests are refused here, before any device work."""
-        self.pool.check_fits(request)
+        self._check_request(request)
         self.queue.submit(request)
         if on_token is not None:
             self._callbacks[request.uid] = on_token
@@ -640,7 +814,7 @@ class Engine:
         # backstop). Transient shortage is not failure: paged admission
         # waits for pages, decode-time exhaustion preempts and re-queues.
         for r in requests:
-            self.pool.check_fits(r)
+            self._check_request(r)
         order = [r.uid for r in requests]
         for r in requests:
             self.queue.submit(r)
@@ -651,6 +825,9 @@ class Engine:
         saved0 = self._prefill_tokens_saved
         cow0 = getattr(self.pool, "n_cow", 0)
         reclaim0 = getattr(self.pool, "n_reclaimed", 0)
+        spec0 = (self._n_spec_rounds, self._spec_drafted,
+                 self._spec_draft_accepted, self._spec_emitted,
+                 self._spec_draft_s, self._spec_verify_s)
         self._backpressure = {"admission": [], "decode": []}
         self._last_decode_end = None
         self._max_decode_gap = 0.0
@@ -707,6 +884,25 @@ class Engine:
                 "peak_pages": self.pool.peak_pages,
                 "decode_path": "fused" if self.fused else "gather",
                 "backpressure": self._backpressure,
+            })
+        self.stats["speculative"] = bool(self.speculate_k)
+        if self.speculate_k:
+            rounds = self._n_spec_rounds - spec0[0]
+            drafted = self._spec_drafted - spec0[1]
+            accepted = self._spec_draft_accepted - spec0[2]
+            emitted = self._spec_emitted - spec0[3]
+            self.stats.update({
+                "speculate_k": self.speculate_k,
+                "draft_bits": self.draft_bits,
+                "spec_rounds": rounds,
+                "spec_drafted_tokens": drafted,
+                "spec_accepted_tokens": accepted,
+                "spec_acceptance_rate": accepted / max(drafted, 1),
+                "spec_tokens_per_round": emitted / max(rounds, 1),
+                "spec_draft_us": (self._spec_draft_s - spec0[4]) * 1e6
+                                 / max(rounds, 1),
+                "spec_verify_us": (self._spec_verify_s - spec0[5]) * 1e6
+                                  / max(rounds, 1),
             })
         self.stats["prefix_cache"] = self.prefix is not None
         if self.prefix is not None:

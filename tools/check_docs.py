@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Docs consistency gate (stdlib-only; the CI ``docs`` job runs this).
+
+Three checks, each of which has rotted silently at least once in repos
+shaped like this one:
+
+1. **DESIGN anchors**: every ``DESIGN.md §N[.M]`` reference in the
+   repo's Python docstrings/comments and markdown files must point at a
+   section heading that actually exists in ``DESIGN.md`` — module
+   docstrings open with their section reference, so a renumbered or
+   deleted section must fail CI, not quietly mislead the next reader.
+2. **Markdown links**: every relative link in ``*.md`` must resolve —
+   the target file exists, and a ``#fragment`` matches a heading in the
+   target (GitHub slug rules, approximated).
+3. **Bench marker coverage**: every *marker* row name
+   (``us_per_call == 0.0``) in the ``BENCH_*.json`` trajectories must
+   appear in ``EXPERIMENTS.md`` — markers are the hard-asserted
+   acceptance results, and the ledger's contract is that it documents
+   all of them with a reproduction command.
+
+    python tools/check_docs.py [--root PATH]
+
+Exit 0 when clean, 1 with one ``file: message`` line per finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+SKIP_DIRS = {".git", "__pycache__", ".ci-autotune", "node_modules"}
+# Retrieved source material (paper abstract, related-work dumps, exemplar
+# snippets) — not repo-authored docs; their figure links point outside
+# the checkout by construction.
+SKIP_FILES = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+
+# "(DESIGN.md §7–§10, §12 and §14)" -> the chunk of §-numbers after the
+# filename; every number in the chunk must be a real heading.
+_REF = re.compile(r"DESIGN\.md\s*((?:§[\d.]+|[–\-,;()\s]|and\b)+)")
+_SECTION_NUM = re.compile(r"\d+(?:\.\d+)?")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_DESIGN_HEADING = re.compile(r"^#{2,3}\s+§(\d+(?:\.\d+)?)\b", re.MULTILINE)
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style heading slug (close enough for ASCII headings)."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\s-]", "", text)
+    return re.sub(r"[\s]+", "-", text).strip("-")
+
+
+def _tracked_files(root: Path, suffix: str) -> list[Path]:
+    return sorted(p for p in root.rglob(f"*{suffix}")
+                  if not (SKIP_DIRS & set(p.relative_to(root).parts))
+                  and p.name not in SKIP_FILES)
+
+
+def check_design_refs(root: Path) -> list[str]:
+    design = root / "DESIGN.md"
+    if not design.is_file():
+        return [f"{design}: missing (every §-reference dangles)"]
+    sections = set(_DESIGN_HEADING.findall(design.read_text()))
+    findings = []
+    for path in _tracked_files(root, ".py") + _tracked_files(root, ".md"):
+        text = path.read_text(errors="replace")
+        for m in _REF.finditer(text):
+            for num in _SECTION_NUM.findall(m.group(1)):
+                if num not in sections:
+                    line = text[:m.start()].count("\n") + 1
+                    findings.append(
+                        f"{path.relative_to(root)}:{line}: DESIGN.md §{num} "
+                        f"referenced but no such section heading exists")
+    return findings
+
+
+def check_markdown_links(root: Path) -> list[str]:
+    findings = []
+    for path in _tracked_files(root, ".md"):
+        text = path.read_text(errors="replace")
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            line = text[:m.start()].count("\n") + 1
+            where = f"{path.relative_to(root)}:{line}"
+            target, _, fragment = target.partition("#")
+            dest = path if not target else (path.parent / target).resolve()
+            if target and not dest.exists():
+                findings.append(f"{where}: broken link -> {target}")
+                continue
+            if fragment and dest.suffix == ".md":
+                slugs = {_slug(h) for h in _HEADING.findall(dest.read_text())}
+                if fragment.lower() not in slugs:
+                    findings.append(
+                        f"{where}: broken anchor -> "
+                        f"{target or dest.name}#{fragment}")
+    return findings
+
+
+def check_bench_markers(root: Path) -> list[str]:
+    ledger = root / "EXPERIMENTS.md"
+    if not ledger.is_file():
+        return [f"{ledger}: missing (the bench markers have no ledger)"]
+    ledger_text = ledger.read_text()
+    findings = []
+    for bench in sorted(root.glob("BENCH_*.json")):
+        try:
+            doc = json.loads(bench.read_text())
+        except json.JSONDecodeError as e:
+            findings.append(f"{bench.name}: unreadable trajectory ({e})")
+            continue
+        markers = {row["name"] for run in doc.get("runs", [])
+                   for row in run.get("rows", [])
+                   if row.get("us_per_call") == 0.0}
+        for name in sorted(markers):
+            if name not in ledger_text:
+                findings.append(
+                    f"{bench.name}: marker row {name!r} is not documented "
+                    f"in EXPERIMENTS.md")
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parent.parent)
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+
+    findings = (check_design_refs(root) + check_markdown_links(root)
+                + check_bench_markers(root))
+    for f in findings:
+        print(f)
+    counted = (f"{len(findings)} finding" + ("s" if len(findings) != 1 else ""))
+    print(f"check_docs: {counted}", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
